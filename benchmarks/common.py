@@ -1,0 +1,26 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: list[dict]) -> None:
+    """Print the run.py CSV contract: name,us_per_call,derived."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

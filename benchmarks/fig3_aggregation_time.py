@@ -1,0 +1,70 @@
+"""Paper Fig 3: server-side aggregation wall time per rule, at the paper's
+scale (K=100 clients, d = the MNIST DNN's 535,818 parameters).
+
+Also benchmarks the Pallas kernel variants (interpret mode on CPU — relative
+numbers only; on TPU these run compiled) and AFA's iterative-vs-gram variants
+(the beyond-paper one-shot Gram optimization, see EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import (
+    AFAConfig,
+    afa_aggregate,
+    comed_aggregate,
+    fa_aggregate,
+    mkrum_aggregate,
+)
+
+D_PAPER = 784 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10  # 535,818
+
+
+def run(quick: bool = False) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for K in ([10] if quick else [10, 100]):
+        d = D_PAPER if not quick else 50_000
+        base = rng.normal(size=(d,)).astype(np.float32)
+        U = jnp.asarray(base[None] + 0.05 * rng.normal(size=(K, d)).astype(np.float32))
+        n_k = jnp.ones((K,), jnp.float32)
+        p_k = jnp.full((K,), 0.5, jnp.float32)
+
+        fns = {
+            "fa": lambda u: fa_aggregate(u, n_k).aggregate,
+            "afa_iterative": lambda u: afa_aggregate(
+                u, n_k, p_k, config=AFAConfig(variant="iterative")
+            ).aggregate,
+            "afa_gram": lambda u: afa_aggregate(
+                u, n_k, p_k, config=AFAConfig(variant="gram")
+            ).aggregate,
+            "mkrum": lambda u: mkrum_aggregate(
+                u, num_byzantine=max(K // 3, 1), num_selected=max(K // 2, 1)
+            ).aggregate,
+            "comed": lambda u: comed_aggregate(u).aggregate,
+        }
+        times = {}
+        for name, fn in fns.items():
+            t = timeit(fn, U, iters=3 if not quick else 2)
+            times[name] = t
+            rows.append({
+                "name": f"fig3/K{K}_d{d}/{name}",
+                "us_per_call": round(t * 1e6, 1),
+                "derived": "",
+            })
+        rows.append({
+            "name": f"fig3/K{K}_d{d}/speedup_vs_mkrum",
+            "us_per_call": "",
+            "derived": f"afa_iter={times['mkrum']/times['afa_iterative']:.1f}x;"
+                       f"afa_gram={times['mkrum']/times['afa_gram']:.1f}x;"
+                       f"comed_over_afa={times['comed']/times['afa_iterative']:.1f}x",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,153 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/) and derives
+the three roofline terms per (arch x shape x mesh) against TPU v5e constants.
+
+  compute    = HLO_FLOPs       / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes       / (chips x 819e9  B/s)
+  collective = collective_bytes/ (chips x 2 links x 50e9 B/s)
+
+HLO_FLOPs = trip-scaled dot FLOPs from the HLO parser (XLA's cost_analysis
+counts scan bodies once — see repro.launch.hlo_analysis); the analytic model
+6·N·D cross-check and utilization ratio are reported alongside.  All dry-run
+byte counts are global; divided by chip count here.
+
+Writes experiments/roofline.md and emits one row per combo.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+LINKS = 2                # effective links per chip engaged per collective hop
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments", "roofline.md")
+
+
+def analyze_record(r: dict) -> dict | None:
+    """IMPORTANT semantics (verified empirically, see EXPERIMENTS.md §Roofline):
+    after SPMD partitioning, compiled.cost_analysis(), memory_analysis() and
+    every HLO shape are PER-DEVICE — no chip division here.  Global FLOPs =
+    per-device x chips (used only for the 6ND utilization ratio).  The CPU
+    backend promotes bf16 to f32, so capacity numbers carry a ~2x inflation
+    vs a real TPU lowering (flagged in the table)."""
+    if r.get("status") != "ok":
+        return None
+    chips = max(r.get("num_chips", 1), 1)
+    hlo = r.get("hlo", {})
+    ana = r.get("analytic", {})
+    flops = hlo.get("dot_flops_scaled", 0.0) or r["cost_analysis_raw"]["flops"]
+    coll = hlo.get("collective_bytes_total", 0.0)
+    mem = r["memory"]
+    live_bytes = mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+    bytes_proxy = hlo.get("hbm_traffic_proxy_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    # HBM-traffic floor: every live per-device byte touched once
+    t_memory = live_bytes / HBM_BW
+    t_coll = coll / (LINKS * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = ana.get("model_flops_6nd", 0.0)
+    global_flops = flops * chips
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "variant": r.get("variant", "baseline"),
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops,
+        "model_flops_6nd": model_flops,
+        "useful_ratio": (model_flops / global_flops) if global_flops else 0.0,
+        "analytic_flops": ana.get("analytic_flops", 0.0),
+        "coll_bytes": coll,
+        "hbm_bytes_floor": live_bytes,
+        "hbm_bytes_proxy": bytes_proxy,
+        "temp_gib_per_chip": mem["temp_bytes"] / 2**30,
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        if base.count("__") > 2:  # variant records live in §Perf, not here
+            continue
+        with open(f) as fh:
+            r = json.load(fh)
+        a = analyze_record(r)
+        if a is None:
+            if r.get("status") == "skip":
+                recs.append({"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                             "skip": r.get("skip_reason", "")})
+            continue
+        recs.append(a)
+        step_s = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        rows.append({
+            "name": f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}",
+            "us_per_call": round(step_s * 1e6, 1),
+            "derived": (
+                f"dom={a['dominant']};compute={a['t_compute_s']:.3e}s;"
+                f"memory={a['t_memory_s']:.3e}s;coll={a['t_collective_s']:.3e}s;"
+                f"useful={a['useful_ratio']:.2f}"
+            ),
+        })
+    _write_md(recs)
+    return rows
+
+
+def _fix_suggestion(a) -> str:
+    """One sentence on what would move the dominant term down (per the
+    measured §Perf iterations in EXPERIMENTS.md)."""
+    shape, dom = a["shape"], a["dominant"]
+    if dom == "collective":
+        if shape == "train_4k":
+            return ("head-local attention layout + microbatching "
+                    "(--variant act_shard_mb8: 2.6x on llama3) or FSDP-activations "
+                    "in scan mode (--variant scan_int8_fsdp_mb8: 4.7x on nemotron)")
+        return ("q-block sequence parallelism (--variant seq_par: 1.31x on "
+                "paligemma); Pallas flash kernel for the residual score psums")
+    if dom == "memory":
+        if shape in ("decode_32k", "long_500k"):
+            return "int8 weights halve the per-token weight stream; batch more requests"
+        return "microbatch gradient accumulation (--variant microbatch8)"
+    return "increase per-chip batch or shrink the model axis"
+
+
+def _write_md(recs):
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("# Roofline terms per (arch × shape × mesh)\n\n")
+        f.write("TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.\n")
+        f.write("All terms derived from PER-DEVICE compiled quantities "
+                "(HLO shapes are post-SPMD).  temp GiB/chip is the CPU-backend "
+                "estimate (bf16 promoted to f32 → ~2× a TPU lowering).\n\n")
+        f.write("| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+                "| dominant | 6ND/HLO | temp GiB/chip | what moves the dominant term |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for a in recs:
+            if "skip" in a:
+                f.write(f"| {a['arch']} | {a['shape']} | {a['mesh']} | — | — | — | "
+                        f"SKIP: {a['skip'][:60]} | — | — | — |\n")
+                continue
+            f.write(
+                f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+                f"| {a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} "
+                f"| {a['t_collective_s']:.3e} | **{a['dominant']}** "
+                f"| {a['useful_ratio']:.2f} | {a['temp_gib_per_chip']:.2f} "
+                f"| {_fix_suggestion(a)} |\n"
+            )
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,27 @@
+"""End-to-end driver: federated training of an assigned LLM architecture
+with AFA as the aggregation rule, including byzantine clients.
+
+Uses the real launcher (repro.launch.train) on a reduced smollm-135m config:
+the same code path that runs the full config on the production mesh.  Two of
+six clients send poisoned updates (scrambled labels); watch good_frac settle
+at 4/6 as AFA screens them every round.
+
+  PYTHONPATH=src python examples/fed_llm_training.py
+"""
+
+from repro.launch.train import main
+
+raise SystemExit(
+    main([
+        "--arch", "smollm-135m",
+        "--reduced",
+        "--rounds", "6",
+        "--clients", "6",
+        "--local-steps", "2",
+        "--batch", "2",
+        "--seq", "128",
+        "--lr", "0.05",
+        "--byzantine", "2",
+        "--ckpt", "/tmp/fed_llm_ckpt.msgpack",
+    ])
+)

@@ -1,0 +1,39 @@
+"""Mini Table-1: every aggregation rule vs every attack scenario.
+
+Reproduces the paper's core comparison (AFA / FA / MKRUM / COMED under
+clean / byzantine / label-flipping / noisy clients) plus two extra rules
+(trimmed-mean, norm-clip) and the beyond-paper ALIE stealth attack.
+
+  PYTHONPATH=src python examples/robust_vs_attacks.py
+"""
+
+import numpy as np
+
+from repro.data import make_mnist_like
+from repro.fed import ServerConfig, SimConfig, run_simulation
+
+RULES = ["afa", "fa", "mkrum", "comed", "trimmed_mean", "norm_clip"]
+SCENARIOS = ["clean", "byzantine", "flipping", "noisy", "alie"]
+
+data = make_mnist_like(n_train=3000, n_test=800)
+
+print(f"{'scenario':12s} " + " ".join(f"{r:>13s}" for r in RULES))
+for scenario in SCENARIOS:
+    row = []
+    for rule in RULES:
+        sim = SimConfig(
+            num_clients=10, scenario=scenario, rounds=10, local_epochs=2,
+            batch_size=200, hidden=(512, 256), dropout=False, seed=0,
+        )
+        res = run_simulation(data, sim, ServerConfig(rule=rule, num_clients=10))
+        err = float(np.mean(res.test_error[-3:]))
+        det = (
+            f"({res.detection_rate:.0%} blk)" if rule == "afa" and scenario != "clean"
+            else ""
+        )
+        row.append(f"{err:6.2f}%{det:>7s}")
+    print(f"{scenario:12s} " + " ".join(f"{c:>13s}" for c in row))
+
+print("\nExpected phenomenology (paper Table 1): FA collapses under byzantine;"
+      "\nMKRUM/COMED wobble under flipping; AFA stays at clean-level error"
+      "\nand blocks the attackers.  ALIE (stealth) stresses every rule.")

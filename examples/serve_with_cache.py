@@ -1,0 +1,57 @@
+"""Serving example: batched prefill + token-by-token decode with a KV cache,
+plus the sub-quadratic sliding-window/ring-buffer path used by long_500k.
+
+  PYTHONPATH=src python examples/serve_with_cache.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+cfg = get_config("smollm-135m").reduced().with_(
+    param_dtype="float32", compute_dtype="float32", sliding_window=64
+)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+B, L, STEPS = 4, 40, 12  # L + STEPS < window: both paths see identical context
+prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+
+# ---- full-cache serving (decode_32k path) ----------------------------------
+logits, cache = jax.jit(
+    lambda p, b: model.prefill(p, b, cache_size=L + STEPS)
+)(params, {"tokens": prompt})
+decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+t0 = time.perf_counter()
+out = [tok]
+for _ in range(STEPS):
+    logits, cache = decode(params, cache, out[-1])
+    out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+dt = (time.perf_counter() - t0) / STEPS
+print(f"full cache:  {STEPS} tokens decoded, {dt*1e3:.1f} ms/token/batch")
+
+# ---- ring-buffer serving (long_500k path) -----------------------------------
+logits, rcache = jax.jit(
+    lambda p, b: model.prefill(p, b, cache_size=cfg.sliding_window, use_window=True)
+)(params, {"tokens": prompt})
+rdecode = jax.jit(lambda p, c, t: model.decode_step(p, c, t, ring=True))
+tok_r = jnp.argmax(logits, -1).astype(jnp.int32)
+t0 = time.perf_counter()
+outs_r = [tok_r]
+for _ in range(STEPS):
+    logits, rcache = rdecode(params, rcache, outs_r[-1])
+    outs_r.append(jnp.argmax(logits, -1).astype(jnp.int32))
+dt = (time.perf_counter() - t0) / STEPS
+print(f"ring cache:  {STEPS} tokens decoded, {dt*1e3:.1f} ms/token/batch "
+      f"(cache holds only the last {cfg.sliding_window} positions)")
+
+same = sum(bool(jnp.all(a == b)) for a, b in zip(out, outs_r))
+print(f"greedy tokens agree on {same}/{len(out)} steps "
+      "(identical while context fits the window)")

@@ -1,0 +1,19 @@
+from repro.attacks.attacks import (
+    ATTACKS,
+    alie_update_attack,
+    byzantine_update_attack,
+    flip_labels,
+    ipm_update_attack,
+    noisy_features,
+    sign_flip_update_attack,
+)
+
+__all__ = [
+    "ATTACKS",
+    "byzantine_update_attack",
+    "alie_update_attack",
+    "flip_labels",
+    "noisy_features",
+    "ipm_update_attack",
+    "sign_flip_update_attack",
+]

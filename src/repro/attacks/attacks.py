@@ -1,0 +1,69 @@
+"""The paper's three bad-client behaviours + one beyond-paper stealth attack.
+
+Two kinds of hooks:
+  * data poisoning (applied to a client's shard before training):
+      - ``flip_labels``      — label-flipping attack: all labels -> 0
+      - ``noisy_features``   — uniform noise U(-1.4, 1.4) added, re-cropped to
+                               [-1, 1] (or 30% random feature flips for binary
+                               data), the paper's "noisy clients"
+  * update poisoning (replaces the model update a client sends):
+      - ``byzantine_update_attack`` — w_t + N(0, 20^2 I), the paper's
+                               byzantine clients
+      - ``alie_update_attack``      — "A Little Is Enough"-style (Baruch et
+                               al. 2019): colluding attackers shift the benign
+                               mean by z_max standard deviations, staying
+                               inside the benign spread.  The paper names this
+                               family as an open weakness; we include it to
+                               probe AFA beyond its own evaluation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def flip_labels(x: np.ndarray, y: np.ndarray, rng=None, target: int = 0):
+    return x, np.full_like(y, target)
+
+
+def noisy_features(x: np.ndarray, y: np.ndarray, rng=None, *, binary: bool | None = None):
+    rng = rng or np.random.default_rng(0)
+    binary = bool(((x == 0) | (x == 1)).all()) if binary is None else binary
+    if binary:
+        flip = rng.uniform(size=x.shape) < 0.30
+        return np.where(flip, 1.0 - x, x).astype(x.dtype), y
+    eps = rng.uniform(-1.4, 1.4, size=x.shape).astype(x.dtype)
+    return np.clip(x + eps, -1.0, 1.0), y
+
+
+def byzantine_update_attack(w_prev_flat: np.ndarray, rng, scale: float = 20.0):
+    """Paper eq.: w_{t+1}^k <- w_t + Delta, Delta ~ N(0, scale^2 I)."""
+    return w_prev_flat + rng.normal(scale=scale, size=w_prev_flat.shape).astype(
+        w_prev_flat.dtype
+    )
+
+
+def alie_update_attack(benign_updates: np.ndarray, z_max: float = 1.0):
+    """Colluding stealth attack: all attackers send mean - z_max * std of the
+    *benign* updates (coordinate-wise), staying within the benign spread."""
+    mu = benign_updates.mean(axis=0)
+    sd = benign_updates.std(axis=0)
+    return mu - z_max * sd
+
+
+def ipm_update_attack(benign_updates: np.ndarray, eps: float = 0.5):
+    """Inner-product manipulation (Xie et al. 2019a, cited by the paper):
+    colluders send −eps × mean(benign) — a small negatively-aligned update
+    that flips the aggregate's descent direction without a large norm."""
+    return -eps * benign_updates.mean(axis=0)
+
+
+def sign_flip_update_attack(own_update: np.ndarray, w_prev: np.ndarray, scale: float = 3.0):
+    """Reverse and amplify the client's own honest delta."""
+    return w_prev - scale * (own_update - w_prev)
+
+
+ATTACKS = {
+    "flipping": flip_labels,
+    "noisy": noisy_features,
+}

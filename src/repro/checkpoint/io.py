@@ -1,0 +1,80 @@
+"""Round-resumable checkpointing: pytrees -> msgpack (structure) + raw numpy
+buffers, atomic rename, ``latest_checkpoint`` discovery.  No orbax in the
+container; this covers the server state (params, opt state, reputation) at
+simulator scale and is layout-compatible with per-shard dumps at scale."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _encode(leaf):
+    arr = np.asarray(leaf)
+    return {
+        b"__nd__": True,
+        b"dtype": arr.dtype.str,
+        b"shape": list(arr.shape),
+        b"data": arr.tobytes(),
+    }
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(b"__nd__"):
+        return np.frombuffer(obj[b"data"], dtype=np.dtype(obj[b"dtype"])).reshape(
+            obj[b"shape"]
+        )
+    return obj
+
+
+def save_pytree(path: str, tree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_encode(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, template):
+    """Restore into the structure of ``template`` (leaf order must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True, strict_map_key=False)
+    leaves = [_decode(l) for l in payload[b"leaves"]]
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    assert len(leaves) == len(t_leaves), (
+        f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}"
+    )
+    leaves = [
+        np.asarray(l).astype(t.dtype).reshape(t.shape) if hasattr(t, "dtype") else l
+        for l, t in zip(leaves, t_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt_"):
+    if not os.path.isdir(directory):
+        return None
+    cands = [
+        f for f in os.listdir(directory) if f.startswith(prefix) and f.endswith(".msgpack")
+    ]
+    if not cands:
+        return None
+    def step_of(f):
+        try:
+            return int(f[len(prefix) : -len(".msgpack")])
+        except ValueError:
+            return -1
+    return os.path.join(directory, max(cands, key=step_of))

@@ -1,0 +1,20 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 (attention-free) vocab=50280,
+ssm_state=128.  SSD (state-space duality) [arXiv:2405.21060]."""
+
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    fed_mode="vmap",
+    fed_clients=16,
+)

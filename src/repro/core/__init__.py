@@ -1,0 +1,53 @@
+"""Core: the paper's contribution — AFA robust aggregation, Beta-Bernoulli
+client reputation, and blocking — plus the baseline rules it is compared to."""
+
+from repro.core.afa import AFAConfig, AFAResult, afa_aggregate, afa_aggregate_tree
+from repro.core.baselines import (
+    RULES,
+    AggResult,
+    bulyan_aggregate,
+    comed_aggregate,
+    fa_aggregate,
+    mkrum_aggregate,
+    norm_clip_aggregate,
+    pairwise_sq_dists,
+    trimmed_mean_aggregate,
+)
+from repro.core.extra_rules import (
+    centered_clip_aggregate,
+    geometric_median_aggregate,
+    zeno_aggregate,
+)
+from repro.core.reputation import (
+    ReputationState,
+    block_probability,
+    init_reputation,
+    min_rounds_to_block,
+    p_good,
+    update_reputation,
+)
+
+__all__ = [
+    "AFAConfig",
+    "AFAResult",
+    "afa_aggregate",
+    "afa_aggregate_tree",
+    "AggResult",
+    "RULES",
+    "fa_aggregate",
+    "mkrum_aggregate",
+    "comed_aggregate",
+    "trimmed_mean_aggregate",
+    "bulyan_aggregate",
+    "norm_clip_aggregate",
+    "geometric_median_aggregate",
+    "centered_clip_aggregate",
+    "zeno_aggregate",
+    "pairwise_sq_dists",
+    "ReputationState",
+    "init_reputation",
+    "update_reputation",
+    "p_good",
+    "block_probability",
+    "min_rounds_to_block",
+]

@@ -1,0 +1,167 @@
+"""Baseline aggregation rules the paper compares against (plus extras).
+
+All rules share the matrix-form signature ``rule(updates, n_k, p_k, mask) ->
+(K-masked aggregate vector, good_mask)`` so the simulator/server can swap them
+freely.  ``n_k`` / ``p_k`` are ignored by rules that do not use them (MKRUM,
+COMED, ... — the paper notes these disregard per-client data counts).
+
+Implemented:
+  * FA            — Federated Averaging (McMahan et al. 2017)
+  * MKRUM         — Multi-KRUM (Blanchard et al. 2017)
+  * COMED         — coordinate-wise median (Yin et al. 2018)
+  * TRIMMED_MEAN  — coordinate-wise trimmed mean (Yin et al. 2018)
+  * BULYAN        — MKRUM selection + per-coordinate closest-to-median mean
+                    (Mhamdi et al. 2018)
+  * NORM_CLIP     — norm-clipped mean (beyond-paper defensive baseline)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+class AggResult(NamedTuple):
+    aggregate: jnp.ndarray
+    good_mask: jnp.ndarray
+
+
+def _norm_weights(mask, w):
+    c = jnp.where(mask, w, 0.0)
+    return c / jnp.maximum(jnp.sum(c), EPS)
+
+
+@jax.jit
+def fa_aggregate(updates, n_k, p_k=None, mask=None) -> AggResult:
+    K = updates.shape[0]
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    c = _norm_weights(mask, n_k.astype(jnp.float32))
+    return AggResult(
+        (c @ updates.astype(jnp.float32)).astype(updates.dtype), mask
+    )
+
+
+def pairwise_sq_dists(updates):
+    """K×K squared euclidean distances via the Gram identity (one matmul)."""
+    u = updates.astype(jnp.float32)
+    g = u @ u.T
+    sq = jnp.diag(g)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * g
+    return jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_byzantine", "num_selected"))
+def mkrum_aggregate(
+    updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int, num_selected: int
+) -> AggResult:
+    """Multi-KRUM: score_k = sum of the K−f−2 smallest distances to others;
+    average the ``num_selected`` lowest-scoring updates."""
+    K = updates.shape[0]
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    d2 = pairwise_sq_dists(updates)
+    big = jnp.float32(3.4e38)
+    # self-distance and masked-out rows/cols excluded from neighbour sets
+    off = jnp.where(jnp.eye(K, dtype=bool) | ~mask[None, :], big, d2)
+    n_neigh = jnp.maximum(jnp.sum(mask) - num_byzantine - 2, 1)
+    srt = jnp.sort(off, axis=1)
+    idx = jnp.arange(K)[None, :]
+    scores = jnp.sum(jnp.where(idx < n_neigh, srt, 0.0), axis=1)
+    scores = jnp.where(mask, scores, big)
+    m = jnp.minimum(num_selected, jnp.sum(mask))
+    order = jnp.argsort(scores)
+    ranks = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    sel = (ranks < m) & mask
+    c = _norm_weights(sel, jnp.ones((K,), jnp.float32))
+    return AggResult((c @ updates.astype(jnp.float32)).astype(updates.dtype), sel)
+
+
+@jax.jit
+def comed_aggregate(updates, n_k=None, p_k=None, mask=None) -> AggResult:
+    """Coordinate-wise median across clients (masked rows pushed to ±inf in
+    balanced pairs so they never shift the median)."""
+    K, _ = updates.shape
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    u = updates.astype(jnp.float32)
+    m = jnp.sum(mask)
+    # Replace masked rows so half go to +inf, half to -inf -> median of the
+    # live subset is preserved for any live count.
+    dead_rank = jnp.cumsum(~mask) - 1  # rank among dead rows, valid where ~mask
+    hi = (dead_rank % 2) == 0
+    fill = jnp.where(hi, jnp.inf, -jnp.inf)[:, None]
+    u = jnp.where(mask[:, None], u, fill)
+    srt = jnp.sort(u, axis=0)
+    n_dead_lo = jnp.sum(~mask) // 2
+    lo_i = n_dead_lo + jnp.maximum((m - 1) // 2, 0)
+    hi_i = n_dead_lo + jnp.maximum(m // 2, 0)
+    med = 0.5 * (srt[lo_i] + srt[hi_i])
+    return AggResult(med.astype(updates.dtype), mask)
+
+
+@functools.partial(jax.jit, static_argnames=("trim",))
+def trimmed_mean_aggregate(updates, n_k=None, p_k=None, mask=None, *, trim: int) -> AggResult:
+    """Coordinate-wise mean after dropping ``trim`` extremes from both ends."""
+    K, _ = updates.shape
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    u = jnp.where(mask[:, None], updates.astype(jnp.float32), jnp.inf)
+    srt = jnp.sort(u, axis=0)
+    m = jnp.sum(mask)
+    i = jnp.arange(K)[:, None]
+    live = (i >= trim) & (i < m - trim)
+    cnt = jnp.maximum(jnp.sum(live), 1)
+    mean = jnp.sum(jnp.where(live, srt, 0.0), axis=0) / cnt
+    return AggResult(mean.astype(updates.dtype), mask)
+
+
+@functools.partial(jax.jit, static_argnames=("num_byzantine",))
+def bulyan_aggregate(updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int) -> AggResult:
+    """Bulyan: MKRUM-style selection of theta = K−2f updates, then per
+    coordinate average the beta = theta−2f values closest to the median."""
+    K, d = updates.shape
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    theta = max(K - 2 * num_byzantine, 1)
+    sel = mkrum_aggregate(
+        updates, mask=mask, num_byzantine=num_byzantine, num_selected=theta
+    ).good_mask
+    med = comed_aggregate(updates, mask=sel).aggregate.astype(jnp.float32)
+    dist = jnp.where(sel[:, None], jnp.abs(updates.astype(jnp.float32) - med[None]), jnp.inf)
+    beta = max(theta - 2 * num_byzantine, 1)
+    order = jnp.argsort(dist, axis=0)
+    ranks = jnp.zeros((K, d), jnp.int32)
+    ranks = ranks.at[order, jnp.arange(d)[None, :]].set(
+        jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32)[:, None], (K, d))
+    )
+    use = ranks < beta
+    val = jnp.where(use, updates.astype(jnp.float32), 0.0)
+    out = jnp.sum(val, axis=0) / beta
+    return AggResult(out.astype(updates.dtype), sel)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def norm_clip_aggregate(updates, n_k, p_k=None, mask=None, clip=None) -> AggResult:
+    """Clip each update to the masked-median norm, then weighted-average."""
+    K = updates.shape[0]
+    mask = jnp.ones((K,), bool) if mask is None else mask
+    u = updates.astype(jnp.float32)
+    norms = jnp.linalg.norm(u, axis=1)
+    from repro.core.stats import masked_median
+
+    c = masked_median(norms, mask) if clip is None else clip
+    scale = jnp.minimum(1.0, c / jnp.maximum(norms, EPS))
+    u = u * scale[:, None]
+    w = _norm_weights(mask, n_k.astype(jnp.float32))
+    return AggResult((w @ u).astype(updates.dtype), mask)
+
+
+RULES: dict[str, Callable] = {
+    "fa": fa_aggregate,
+    "mkrum": mkrum_aggregate,
+    "comed": comed_aggregate,
+    "trimmed_mean": trimmed_mean_aggregate,
+    "bulyan": bulyan_aggregate,
+    "norm_clip": norm_clip_aggregate,
+}

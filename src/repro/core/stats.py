@@ -1,0 +1,45 @@
+"""Masked scalar statistics used by the robust aggregation rules.
+
+Everything here operates on a ``(K,)`` vector plus a boolean participation
+mask, inside ``jit``/``lax.while_loop`` — so all ops are fixed-shape (no
+boolean indexing).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_mean(x, mask):
+    m = jnp.sum(mask)
+    return jnp.where(m > 0, jnp.sum(jnp.where(mask, x, 0.0)) / jnp.maximum(m, 1), 0.0)
+
+
+def masked_std(x, mask, *, ddof: int = 0):
+    m = jnp.sum(mask)
+    mu = masked_mean(x, mask)
+    var = jnp.sum(jnp.where(mask, (x - mu) ** 2, 0.0)) / jnp.maximum(m - ddof, 1)
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def masked_median(x, mask):
+    """Median of the masked subset (average of the two central order stats).
+
+    Masked-out entries are pushed to +inf before the sort so they land at the
+    tail; the median index is computed from the live count ``m``.
+    """
+    m = jnp.sum(mask)
+    xs = jnp.sort(jnp.where(mask, x, jnp.inf))
+    lo = jnp.maximum((m - 1) // 2, 0)
+    hi = jnp.maximum(m // 2, 0)
+    med = 0.5 * (xs[lo] + xs[hi])
+    return jnp.where(m > 0, med, 0.0)
+
+
+def masked_quantile_bounds(x, mask, trim: int):
+    """(low, high) order statistics after trimming ``trim`` from both ends."""
+    m = jnp.sum(mask)
+    xs = jnp.sort(jnp.where(mask, x, jnp.inf))
+    lo = jnp.clip(trim, 0, jnp.maximum(m - 1, 0))
+    hi = jnp.clip(m - 1 - trim, 0, jnp.maximum(m - 1, 0))
+    return xs[lo], xs[hi]

@@ -1,0 +1,18 @@
+from repro.data.synthetic import (
+    SyntheticClassification,
+    TokenStream,
+    make_mnist_like,
+    make_spambase_like,
+    make_token_stream,
+)
+from repro.data.sharding import dirichlet_shards, iid_shards
+
+__all__ = [
+    "SyntheticClassification",
+    "TokenStream",
+    "make_mnist_like",
+    "make_spambase_like",
+    "make_token_stream",
+    "iid_shards",
+    "dirichlet_shards",
+]

@@ -1,0 +1,17 @@
+from repro.fed.client import local_sgd
+from repro.fed.dnn import dnn_error, dnn_logits, dnn_loss, init_dnn
+from repro.fed.server import FedServer, ServerConfig
+from repro.fed.simulator import SimConfig, SimResult, run_simulation
+
+__all__ = [
+    "local_sgd",
+    "init_dnn",
+    "dnn_logits",
+    "dnn_loss",
+    "dnn_error",
+    "FedServer",
+    "ServerConfig",
+    "SimConfig",
+    "SimResult",
+    "run_simulation",
+]

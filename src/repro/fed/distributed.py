@@ -1,0 +1,247 @@
+"""Distributed federated round — the paper's technique as a pjit-able step.
+
+Maps AFA onto the production mesh (see DESIGN.md §3):
+  * clients ↔ *data*-axis rows (vmap mode), each holding a model replica
+    sharded over *model*; local SGD steps have no cross-client sync;
+  * the robust aggregation IS the round's only collective: per-leaf partial
+    dots lower to psum over *model*, the K-scalar while-loop is replicated,
+    and the weighted averaging is a weighted psum over *data* — the same
+    traffic class as the plain all-reduce FA would do.
+
+Three client-memory modes (cfg.fed_mode):
+  * ``vmap``  — K proposals live simultaneously, K on the leading axis.
+  * ``scan``  — FSDP-sharded params; clients run sequentially via lax.map;
+    proposals stored in bf16 sharded over the full mesh.
+  * ``remat`` — proposals are never stored: 3 streaming passes (plain
+    aggregate+norms → similarities → masked weighted sum), re-running client
+    training instead of holding K×N bytes.  A federated-layer analogue of
+    activation rematerialization (beyond-paper; EXPERIMENTS.md §Perf).
+    One screening round (Algorithm 1 with max_rounds=1) per fed round.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.afa import AFAConfig, _mark_bad, _weights, afa_aggregate_tree
+from repro.core.reputation import ReputationState, p_good, update_reputation
+from repro.optim import sgd_momentum
+from repro.utils.trees import tree_dot
+
+
+class FedRoundConfig(NamedTuple):
+    num_clients: int
+    local_steps: int = 4
+    lr: float = 0.02
+    momentum: float = 0.9
+    afa: AFAConfig = AFAConfig()
+    mode: str = "vmap"  # vmap | scan | remat
+    proposal_dtype: str = "bfloat16"  # storage dtype in scan mode
+    delta_block: float = 0.95
+    microbatch: int = 1  # §Perf: gradient-accumulation chunks per local step
+    # mesh axes carrying the client dimension in vmap mode (e.g. ("data",) or
+    # ("pod","data")).  Needed so with_sharding_constraint inside the vmapped
+    # client closure survives batching (vmap drops constraints without
+    # spmd_axis_name).  None = plain vmap (single-device simulator/tests).
+    client_axes: tuple | None = None
+
+
+def _client_train(loss_fn, opt, params, cbatch, *, microbatch: int = 1):
+    """One client's local SGD: cbatch leaves (S, b, ...).
+
+    ``microbatch`` > 1 splits each step's batch into M accumulation chunks
+    (scan over (M, b/M, ...)) — live activations drop by M at identical
+    math (mean of chunk grads == full-batch grad for a mean loss)."""
+    opt_state = opt.init(params)
+
+    def grad_of(p, mb):
+        if microbatch <= 1:
+            return jax.grad(lambda q: loss_fn(q, mb)[0])(p)
+        chunked = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:]),
+            mb,
+        )
+
+        def acc(carry, mbc):
+            g = jax.grad(lambda q: loss_fn(q, mbc)[0])(p)
+            return jax.tree_util.tree_map(
+                lambda a, b_: a + b_.astype(jnp.float32), carry, g
+            ), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p
+        )
+        total, _ = jax.lax.scan(acc, zeros, chunked)
+        return jax.tree_util.tree_map(
+            lambda g, pp: (g / microbatch).astype(pp.dtype), total, p
+        )
+
+    def step(carry, mb):
+        p, s = carry
+        g = grad_of(p, mb)
+        u, s = opt.update(g, s, p)
+        p = jax.tree_util.tree_map(lambda a, uu: a + uu.astype(a.dtype), p, u)
+        return (p, s), None
+
+    (pk, _), _ = jax.lax.scan(step, (params, opt_state), cbatch)
+    return pk
+
+
+def make_fed_round(model, cfg: FedRoundConfig):
+    """Returns fed_round(params, rep_state, n_k, batch) ->
+    (params', rep_state', metrics).  batch leaves: (K, S, b, ...)."""
+    opt = sgd_momentum(cfg.lr, cfg.momentum)
+    loss_fn = model.loss_fn
+
+    if cfg.mode == "vmap":
+
+        vmap_kw = {}
+        if cfg.client_axes:
+            vmap_kw["spmd_axis_name"] = (
+                cfg.client_axes if len(cfg.client_axes) > 1 else cfg.client_axes[0]
+            )
+
+        def fed_round(params, rep: ReputationState, n_k, batch):
+            mask0 = ~rep.blocked
+            proposals = jax.vmap(
+                lambda cb: _client_train(loss_fn, opt, params, cb, microbatch=cfg.microbatch),
+                **vmap_kw,
+            )(batch)
+            res = afa_aggregate_tree(
+                proposals, n_k, p_good(rep), mask0=mask0, config=cfg.afa
+            )
+            rep2 = update_reputation(rep, res.good_mask, mask0, delta=cfg.delta_block)
+            metrics = {
+                "good_frac": jnp.mean(res.good_mask.astype(jnp.float32)),
+                "afa_rounds": res.rounds,
+                "similarities": res.similarities,
+            }
+            return res.aggregate, rep2, metrics
+
+    elif cfg.mode == "scan":
+        int8 = cfg.proposal_dtype == "int8"
+        pdt = jnp.int8 if int8 else jnp.dtype(cfg.proposal_dtype)
+
+        def _store(tree, params):
+            """Cast a client proposal to storage dtype.
+
+            int8 stores the *delta* w_k - w_t with symmetric per-leaf scales:
+            quantization error lands on the (small) update, not the weights —
+            raw-w int8 would drown the update signal entirely.  Aggregation is
+            algebraically unchanged (AFA weights sum to 1, so
+            Σ c_k (w_t + δ_k) = w_t + Σ c_k δ_k)."""
+            if not int8:
+                return jax.tree_util.tree_map(lambda x: x.astype(pdt), tree)
+
+            def q(x, p):
+                d = x.astype(jnp.float32) - p.astype(jnp.float32)
+                s = jnp.maximum(jnp.max(jnp.abs(d)), 1e-12) / 127.0
+                return {
+                    "q": jnp.clip(jnp.round(d / s), -127, 127).astype(jnp.int8),
+                    "s": s,
+                }
+
+            return jax.tree_util.tree_map(q, tree, params)
+
+        def _load(tree, params):
+            if not int8:
+                return tree
+
+            def dq(leaf, p):
+                return leaf["q"].astype(jnp.float32) * leaf["s"][..., None].reshape(
+                    leaf["s"].shape + (1,) * (leaf["q"].ndim - leaf["s"].ndim)
+                ) + p.astype(jnp.float32)[None]
+
+            return jax.tree_util.tree_map(
+                dq, tree, params,
+                is_leaf=lambda l: isinstance(l, dict) and set(l) == {"q", "s"},
+            )
+
+        def fed_round(params, rep: ReputationState, n_k, batch):
+            mask0 = ~rep.blocked
+            proposals = jax.lax.map(
+                lambda cb: _store(_client_train(loss_fn, opt, params, cb, microbatch=cfg.microbatch), params),
+                batch,
+            )
+            res = afa_aggregate_tree(
+                _load(proposals, params), n_k, p_good(rep), mask0=mask0, config=cfg.afa
+            )
+            agg = jax.tree_util.tree_map(
+                lambda a, t: a.astype(t.dtype), res.aggregate, params
+            )
+            rep2 = update_reputation(rep, res.good_mask, mask0, delta=cfg.delta_block)
+            metrics = {
+                "good_frac": jnp.mean(res.good_mask.astype(jnp.float32)),
+                "afa_rounds": res.rounds,
+                "similarities": res.similarities,
+            }
+            return agg, rep2, metrics
+
+    elif cfg.mode == "remat":
+
+        def fed_round(params, rep: ReputationState, n_k, batch):
+            mask0 = ~rep.blocked
+            p_k = p_good(rep)
+            c0 = _weights(mask0, p_k, n_k)  # (K,)
+
+            train = functools.partial(
+                _client_train, loss_fn, opt, params, microbatch=cfg.microbatch
+            )
+
+            # ---- pass 1: plain weighted aggregate + per-client norms ------
+            def p1(carry, inp):
+                acc = carry
+                ci, cb = inp
+                u = train(cb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + ci * x.astype(jnp.float32), acc, u
+                )
+                return acc, jnp.sqrt(jnp.maximum(tree_dot(u, u), 1e-12))
+
+            acc0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            w_agg, norms = jax.lax.scan(p1, acc0, (c0, batch))
+            agg_norm = jnp.sqrt(jnp.maximum(tree_dot(w_agg, w_agg), 1e-12))
+
+            # ---- pass 2: similarities (recompute client proposals) --------
+            def p2(_, cb):
+                u = train(cb)
+                return None, tree_dot(u, w_agg)
+
+            _, dots = jax.lax.scan(p2, None, batch)
+            sims = dots / (norms * agg_norm)
+
+            # ---- screening (one Algorithm-1 round on K scalars) -----------
+            bad = _mark_bad(sims, mask0, jnp.float32(cfg.afa.xi0), cfg.afa.ddof)
+            mask = mask0 & ~bad
+            c1 = _weights(mask, p_k, n_k)
+
+            # ---- pass 3: masked weighted sum (recompute again) ------------
+            def p3(carry, inp):
+                acc = carry
+                ci, cb = inp
+                u = train(cb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + ci * x.astype(jnp.float32), acc, u
+                )
+                return acc, None
+
+            agg, _ = jax.lax.scan(p3, acc0, (c1, batch))
+            agg = jax.tree_util.tree_map(lambda a, t: a.astype(t.dtype), agg, params)
+            rep2 = update_reputation(rep, mask, mask0, delta=cfg.delta_block)
+            metrics = {
+                "good_frac": jnp.mean(mask.astype(jnp.float32)),
+                "afa_rounds": jnp.int32(1),
+                "similarities": sims,
+            }
+            return agg, rep2, metrics
+
+    else:
+        raise ValueError(f"unknown fed mode {cfg.mode}")
+
+    return fed_round

@@ -1,0 +1,147 @@
+"""Server-side aggregation: rule dispatch + AFA reputation/blocking state.
+
+The server consumes the K client proposals as a dense ``(K, d)`` matrix at
+simulator scale (tree-form lives in ``repro.fed.distributed`` for the mesh
+path).  AFA is the paper's rule; the others are the comparison baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AFAConfig,
+    centered_clip_aggregate,
+    geometric_median_aggregate,
+    afa_aggregate,
+    bulyan_aggregate,
+    comed_aggregate,
+    fa_aggregate,
+    init_reputation,
+    mkrum_aggregate,
+    norm_clip_aggregate,
+    p_good,
+    trimmed_mean_aggregate,
+    update_reputation,
+)
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    rule: str = "afa"            # afa | fa | mkrum | comed | trimmed_mean | bulyan
+                                 # | norm_clip | geomed | centered_clip
+    num_clients: int = 10
+    # AFA
+    alpha0: float = 3.0
+    beta0: float = 3.0
+    xi0: float = 2.0
+    delta_xi: float = 0.5
+    delta_block: float = 0.95
+    afa_variant: str = "iterative"
+    # baselines
+    num_byzantine: int = 3       # f for mkrum/bulyan
+    trim: int = 3                # for trimmed_mean
+    use_kernels: bool = False    # route hot ops through the Pallas kernels
+
+
+class FedServer:
+    """Holds the shared model vector + AFA reputation; one ``aggregate`` per
+    round.  Works on flat vectors; the caller owns (un)flattening."""
+
+    def __init__(self, config: ServerConfig):
+        self.cfg = config
+        self.reputation = init_reputation(config.num_clients, config.alpha0, config.beta0)
+        self.rounds_blocked = np.full(config.num_clients, -1, np.int64)
+        self._round = 0
+
+    # -- selection ----------------------------------------------------------
+    @property
+    def blocked(self) -> np.ndarray:
+        return np.asarray(self.reputation.blocked)
+
+    def select(self, rng: Optional[np.random.Generator] = None, frac: float = 1.0):
+        """Per-round client selection among un-blocked clients."""
+        avail = np.nonzero(~self.blocked)[0]
+        if frac >= 1.0 or rng is None:
+            return avail
+        m = max(1, int(round(frac * len(avail))))
+        return np.sort(rng.choice(avail, size=m, replace=False))
+
+    # -- aggregation ---------------------------------------------------------
+    def aggregate(self, updates: jnp.ndarray, n_k: jnp.ndarray, selected: np.ndarray):
+        """updates: (K, d) with rows outside ``selected`` ignored.
+        Returns (aggregate vector, info dict)."""
+        c = self.cfg
+        K = c.num_clients
+        mask0 = np.zeros(K, bool)
+        mask0[selected] = True
+        mask0 &= ~self.blocked
+        mask0_j = jnp.asarray(mask0)
+        info = {}
+
+        if c.rule == "afa":
+            res = afa_aggregate(
+                updates,
+                jnp.asarray(n_k, jnp.float32),
+                p_good(self.reputation),
+                mask0=mask0_j,
+                config=AFAConfig(
+                    xi0=c.xi0, delta_xi=c.delta_xi, variant=c.afa_variant
+                ),
+            )
+            self.reputation = update_reputation(
+                self.reputation, res.good_mask, mask0_j, delta=c.delta_block
+            )
+            newly_blocked = self.blocked & (self.rounds_blocked < 0)
+            self.rounds_blocked[newly_blocked] = self._round + 1
+            info = {
+                "good_mask": np.asarray(res.good_mask),
+                "rounds": int(res.rounds),
+                "similarities": np.asarray(res.similarities),
+                "blocked": self.blocked.copy(),
+                "p_good": np.asarray(p_good(self.reputation)),
+            }
+            agg = res.aggregate
+        elif c.rule == "fa":
+            out = fa_aggregate(updates, jnp.asarray(n_k, jnp.float32), mask=mask0_j)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "mkrum":
+            m_sel = max(int(mask0.sum()) - c.num_byzantine - 2, 1)
+            out = mkrum_aggregate(
+                updates, mask=mask0_j, num_byzantine=c.num_byzantine, num_selected=m_sel
+            )
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "comed":
+            if c.use_kernels:
+                from repro.kernels import coord_median
+
+                sel = np.nonzero(mask0)[0]
+                agg = coord_median(updates[jnp.asarray(sel)]).astype(updates.dtype)
+                info["good_mask"] = mask0.copy()
+            else:
+                out = comed_aggregate(updates, mask=mask0_j)
+                agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "trimmed_mean":
+            out = trimmed_mean_aggregate(updates, mask=mask0_j, trim=c.trim)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "bulyan":
+            out = bulyan_aggregate(updates, mask=mask0_j, num_byzantine=c.num_byzantine)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "norm_clip":
+            out = norm_clip_aggregate(updates, jnp.asarray(n_k, jnp.float32), mask=mask0_j)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "geomed":
+            out = geometric_median_aggregate(updates, mask=mask0_j)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        elif c.rule == "centered_clip":
+            out = centered_clip_aggregate(updates, mask=mask0_j)
+            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
+        else:
+            raise ValueError(f"unknown rule {c.rule}")
+
+        self._round += 1
+        return agg, info

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the robust-aggregation hot spots.
+
+Each kernel module holds the ``pl.pallas_call`` + ``BlockSpec`` tiling;
+``ops.py`` is the jit'd public wrapper; ``ref.py`` the pure-jnp oracle.
+"""
+
+from repro.kernels.ops import (
+    coord_median,
+    cosine_sim,
+    flash_attention,
+    gram,
+    pairwise_sq_dists_from_gram,
+    weighted_sum,
+)
+
+__all__ = [
+    "cosine_sim",
+    "flash_attention",
+    "gram",
+    "coord_median",
+    "weighted_sum",
+    "pairwise_sq_dists_from_gram",
+]

@@ -1,0 +1,45 @@
+"""Blocked Gram-matrix kernel: G = U @ U^T for K client updates.
+
+Backs both MKRUM's pairwise distances (d2_ij = G_ii + G_jj - 2 G_ij) and the
+one-shot "gram" variant of AFA.  Grid over the d axis; each step loads one
+(K, BLOCK_D) tile and accumulates the (K, K) outer product on the MXU.  K is
+the client count (<= a few hundred), so the (K, K) f32 accumulator lives
+comfortably in VMEM for the whole pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, g_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    g_ref[...] += jax.lax.dot_general(
+        u, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def gram(
+    updates: jnp.ndarray,  # (K, d), d % block_d == 0
+    *,
+    block_d: int = 2048,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    K, d = updates.shape
+    assert d % block_d == 0, (d, block_d)
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // block_d,),
+        in_specs=[pl.BlockSpec((K, block_d), lambda b: (0, b))],
+        out_specs=pl.BlockSpec((K, K), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, K), jnp.float32),
+        interpret=interpret,
+    )(updates)

@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding (d zero-padded to a block multiple; padded columns are exact
+for the dot/norm reductions and are sliced off for median/weighted-sum),
+block-size selection under a VMEM budget, and the interpret-mode switch
+(interpret=True everywhere except a real TPU backend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coord_median as _cm
+from repro.kernels import cosine_sim as _cs
+from repro.kernels import gram as _gr
+from repro.kernels import weighted_sum as _ws
+
+EPS = 1e-12
+VMEM_BUDGET = 8 * 1024 * 1024  # bytes we allow a block working set to claim
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_d(x: jnp.ndarray, block_d: int) -> jnp.ndarray:
+    d = x.shape[-1]
+    rem = (-d) % block_d
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)
+
+
+def _pick_block_d(d: int, per_elem_bytes: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred whose working set fits VMEM."""
+    b = preferred
+    while b > 128 and b * per_elem_bytes > VMEM_BUDGET:
+        b //= 2
+    return max(min(b, preferred), 128)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cosine_sim(updates, agg, *, block_d: int | None = None, interpret: bool | None = None):
+    """(K, d), (d,) -> (K,) cosine similarities (f32)."""
+    K, d = updates.shape
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    block_d = block_d or _pick_block_d(d, (K + 1) * 4, 2048)
+    u = _pad_d(updates, block_d)
+    w = _pad_d(agg[None, :], block_d)
+    dots, unorm2, wnorm2 = _cs.cosine_sim_parts(u, w, block_d=block_d, interpret=interpret)
+    un = jnp.sqrt(jnp.maximum(unorm2[:, 0], EPS))
+    wn = jnp.sqrt(jnp.maximum(wnorm2[0, 0], EPS))
+    return dots[:, 0] / (un * wn)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram(updates, *, block_d: int | None = None, interpret: bool | None = None):
+    """(K, d) -> (K, K) Gram matrix (f32)."""
+    K, d = updates.shape
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    block_d = block_d or _pick_block_d(d, K * 4, 2048)
+    return _gr.gram(_pad_d(updates, block_d), block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def coord_median(updates, *, block_d: int | None = None, interpret: bool | None = None):
+    """(K, d) -> (d,) coordinate-wise median (f32)."""
+    K, d = updates.shape
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    # compare cube is K*K*block_d f32
+    block_d = block_d or _pick_block_d(d, K * K * 4, 512)
+    u = _pad_d(updates, block_d)
+    return _cm.coord_median(u, block_d=block_d, interpret=interpret)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def weighted_sum(weights, updates, *, block_d: int | None = None, interpret: bool | None = None):
+    """(K,), (K, d) -> (d,) reputation-weighted aggregate (f32)."""
+    K, d = updates.shape
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    block_d = block_d or _pick_block_d(d, K * 4, 2048)
+    u = _pad_d(updates, block_d)
+    return _ws.weighted_sum(weights[None, :], u, block_d=block_d, interpret=interpret)[:d]
+
+
+def pairwise_sq_dists_from_gram(g: jnp.ndarray) -> jnp.ndarray:
+    sq = jnp.diag(g)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """(B, Lq, Hq, D), (B, Lk, Hkv, D) x2 -> (B, Lq, Hq, D).
+
+    GQA handled by broadcasting kv heads before flattening (B, H) -> BH for
+    the Pallas kernel; explicit per-head layout, no GSPMD partial-score psums
+    (see EXPERIMENTS.md §Perf C)."""
+    from repro.kernels.flash_attn import flash_attention_bh
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, lq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, lk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, lk, d)
+    of = flash_attention_bh(
+        qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+    return of.reshape(b, hq, lq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; callers (dryrun.py)
+are responsible for setting ``--xla_force_host_platform_device_count`` BEFORE
+the first jax call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU integration tests (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=<n> in a subprocess)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """The client/batch axes of a mesh: ('pod','data') when present."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_client_rows(mesh) -> int:
+    """Number of client rows = product of data-like axis sizes."""
+    import numpy as np
+
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

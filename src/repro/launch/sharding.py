@@ -1,0 +1,178 @@
+"""Sharding rules: pytree path -> PartitionSpec.
+
+Parameter rules (name-based, applied per leaf):
+  * vocab / head / embedding rows    -> *model*
+  * attention q/k/v out-features     -> *model*   (head-sharded)
+  * attention o in-features          -> *model*
+  * MLP ff dim (gate/up out, down in)-> *model*
+  * MoE expert dim                   -> *model*   (expert parallelism)
+  * mamba in/out projection features -> *model*
+  * 1-D params (norms, biases, A_log)-> replicated
+  * vmap-mode stacked client axis    -> client rows = ('pod','data')
+  * FSDP (scan/remat modes): the largest remaining unsharded dim
+    additionally -> ('pod','data')
+
+A dim is only sharded if its size divides the mesh-axis size; otherwise it
+falls back to replicated (logged by the caller if verbose).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _divisible(dim: int, mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for pk in path:
+        if hasattr(pk, "key"):
+            out.append(str(pk.key))
+        elif hasattr(pk, "idx"):
+            out.append(str(pk.idx))
+        elif hasattr(pk, "name"):
+            out.append(str(pk.name))
+    return "/".join(out)
+
+
+# model-axis dim index per param name (AFTER stripping leading stack axes):
+# name fragment -> which dim gets the *model* axis
+_MODEL_DIM_RULES = [
+    ("embed", 0),        # (V, d): shard vocab
+    ("head", 1),         # (d, V): shard vocab
+    ("frontend_proj", 1),
+    ("wq", 1), ("wk", 1), ("wv", 1),   # (d, H*hd): shard heads
+    ("wo", 0),                         # (H*hd, d)
+    ("moe/gate", 0), ("moe/up", 0), ("moe/down", 0), ("router", None),
+    ("gate", 1), ("up", 1),            # (d, ff)
+    ("down", 0),                       # (ff, d)
+    ("in_proj", 1),                    # (d, 2di+2n+h)
+    ("out_proj", 0),                   # (di, d)
+    ("conv_w", 1), ("conv_b", None),
+    ("A_log", None), ("dt_bias", None), ("D", None),
+]
+
+
+def _model_dim_for(pstr: str):
+    for frag, dim in _MODEL_DIM_RULES:
+        if "/" in frag:
+            if frag in pstr:
+                return dim, frag
+        elif pstr.endswith("/" + frag) or pstr == frag or pstr.endswith(frag):
+            return dim, frag
+    return None, None
+
+
+def param_pspec(
+    pstr: str,
+    shape: tuple,
+    mesh,
+    *,
+    num_stack_axes: int = 0,
+    client_axis: bool = False,
+    fsdp: bool = False,
+) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    num_stack_axes: leading axes added by layer-stacking (1 for scanned layer
+    stacks, 0 for shared/unstacked params).  client_axis: an additional
+    leading client axis (vmap fed mode) sharded over the data axes.
+    """
+    daxes = data_axes(mesh)
+    spec: list = [None] * len(shape)
+    off = 0
+    if client_axis:
+        if _divisible(shape[0], mesh, daxes):
+            spec[0] = daxes
+        off += 1
+    off += num_stack_axes  # layer-stack axes stay unsharded
+
+    body = shape[off:]
+    is_moe = "moe/" in pstr
+    mdim, _ = _model_dim_for(pstr)
+    if is_moe and pstr.split("/")[-1] in ("gate", "up", "down"):
+        mdim = 0  # expert dim leads the body for stacked moe weights
+    used_data = client_axis
+    if mdim is not None and len(body) > mdim and body[mdim] >= 2:
+        if _divisible(body[mdim], mesh, "model"):
+            spec[off + mdim] = "model"
+    if fsdp and not used_data and len(body) >= 2:
+        # shard the largest remaining dim over the data axes
+        cands = [
+            (body[i], i) for i in range(len(body)) if spec[off + i] is None
+        ]
+        cands.sort(reverse=True)
+        for size, i in cands:
+            if size >= 2 and _divisible(size, mesh, daxes):
+                spec[off + i] = daxes
+                break
+    return P(*spec)
+
+
+def shard_params_tree(shapes_tree, mesh, *, client_axis=False, fsdp=False,
+                      stacked_prefixes=("layers", "shared")):
+    """ShapeDtypeStruct tree -> tree of ShapeDtypeStructs with NamedSharding.
+
+    ``layers/...`` leaves have one leading stack axis (the scanned L axis);
+    ``shared/...`` (hybrid) has none.  The client axis, when present, was
+    prepended by the caller to every leaf.
+    """
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        n_stack = 1 if pstr.startswith("layers/") else 0
+        spec = param_pspec(
+            pstr, leaf.shape, mesh,
+            num_stack_axes=n_stack, client_axis=client_axis, fsdp=fsdp,
+        )
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def batch_pspec(shape: tuple, mesh, *, client_axis: bool, per_client_batch: bool) -> P:
+    """Fed batch leaves (K, S, b, ...) or plain batch (B, ...)."""
+    daxes = data_axes(mesh)
+    spec: list = [None] * len(shape)
+    if client_axis:
+        if _divisible(shape[0], mesh, daxes):
+            spec[0] = daxes
+    elif shape and _divisible(shape[0], mesh, daxes):
+        spec[0] = daxes
+    return P(*spec)
+
+
+def cache_pspec(shape: tuple, mesh, *, batch_dim: int = 1) -> P:
+    """KV/SSM cache leaves: (L, B, ...) stacked or (B, ...) unstacked.
+    Shard batch over data axes; shard a heads-like dim over model when
+    divisible."""
+    daxes = data_axes(mesh)
+    spec: list = [None] * len(shape)
+    if len(shape) > batch_dim and _divisible(shape[batch_dim], mesh, daxes) and shape[batch_dim] > 1:
+        spec[batch_dim] = daxes
+    # try a model-sharding on the last-but-one dim (kv heads for attention
+    # caches (L,B,S,H,hd); state heads for ssm (L,B,h,n,p) -> dim 2)
+    for cand in (len(shape) - 2, 2):
+        if 0 <= cand < len(shape) and spec[cand] is None and cand != batch_dim:
+            if shape[cand] >= 2 and _divisible(shape[cand], mesh, "model"):
+                spec[cand] = "model"
+                break
+    return P(*spec)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

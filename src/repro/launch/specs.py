@@ -1,0 +1,173 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape x mesh) combo.
+
+Everything here is allocation-free: parameter/cache shapes come from
+``jax.eval_shape`` and are annotated with NamedShardings from
+``repro.launch.sharding``; the dry-run lowers against these stand-ins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, num_client_rows
+from repro.launch.sharding import batch_pspec, cache_pspec, shard_params_tree
+
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, global_batch=128),
+    "long_500k": dict(kind="long_decode", seq=524_288, global_batch=1),
+}
+
+LOCAL_STEPS = 4  # client SGD steps per federated round
+
+
+@dataclasses.dataclass
+class SpecBundle:
+    step_kind: str          # train | prefill | decode | forward
+    args: tuple             # ShapeDtypeStructs (sharded) in call order
+    meta: dict              # bookkeeping for the roofline analysis
+    skip_reason: str | None = None
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _token_batch_specs(cfg, mesh, *, lead: tuple, seq: int, client_axis: bool):
+    """Token/label (+frontend) specs with leading dims ``lead`` + (seq,)."""
+    out = {
+        "tokens": _sds(lead + (seq,), jnp.int32, mesh,
+                       batch_pspec(lead + (seq,), mesh, client_axis=client_axis, per_client_batch=True)),
+        "labels": _sds(lead + (seq,), jnp.int32, mesh,
+                       batch_pspec(lead + (seq,), mesh, client_axis=client_axis, per_client_batch=True)),
+    }
+    if cfg.family == "vlm":
+        shp = lead + (cfg.prefix_len, cfg.frontend_dim)
+        out["patch_embeds"] = _sds(shp, cfg.cdtype, mesh,
+                                   batch_pspec(shp, mesh, client_axis=client_axis, per_client_batch=True))
+    if cfg.family == "audio":
+        shp = lead + (seq, cfg.frontend_dim)
+        out = {
+            "frame_embeds": _sds(shp, cfg.cdtype, mesh,
+                                 batch_pspec(shp, mesh, client_axis=client_axis, per_client_batch=True)),
+            "labels": out["labels"],
+        }
+    return out
+
+
+def fed_client_count(cfg, mesh) -> int:
+    return num_client_rows(mesh) if cfg.fed_mode == "vmap" else cfg.fed_clients
+
+
+def param_specs(model, mesh, *, client_axis: bool = False):
+    cfg = model.config
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if client_axis:
+        K = fed_client_count(cfg, mesh)
+        shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), shapes
+        )
+    return shard_params_tree(
+        shapes, mesh,
+        client_axis=client_axis,
+        fsdp=cfg.fed_mode in ("scan", "remat"),
+    )
+
+
+def reputation_specs(K: int, mesh):
+    from repro.core.reputation import ReputationState
+
+    rep = ReputationState(
+        alpha=jax.ShapeDtypeStruct((K,), jnp.float32, sharding=NamedSharding(mesh, P())),
+        beta=jax.ShapeDtypeStruct((K,), jnp.float32, sharding=NamedSharding(mesh, P())),
+        blocked=jax.ShapeDtypeStruct((K,), jnp.bool_, sharding=NamedSharding(mesh, P())),
+    )
+    return rep
+
+
+def cache_specs(model, mesh, batch: int, cache_size: int):
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(batch, cache_size, model.config.cdtype)
+    )
+
+    def one(path, leaf):
+        # leaves: layers/* have leading L axis -> batch at dim 1; pos (B,) at 0
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        if pstr == "pos":
+            return _sds(leaf.shape, leaf.dtype, mesh,
+                        batch_pspec(leaf.shape, mesh, client_axis=False, per_client_batch=False))
+        bdim = 1  # stacked (L or nseg) leading axis
+        return _sds(leaf.shape, leaf.dtype, mesh, cache_pspec(leaf.shape, mesh, batch_dim=bdim))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def input_specs(model, shape_name: str, mesh, *, local_steps: int | None = None) -> SpecBundle:
+    """The full argument spec list for the step this (arch, shape) lowers."""
+    cfg = model.config
+    steps_per_round = local_steps or LOCAL_STEPS
+    info = INPUT_SHAPES[shape_name]
+    seq, gb = info["seq"], info["global_batch"]
+    kind = info["kind"]
+
+    if cfg.is_encoder and kind in ("decode", "long_decode"):
+        return SpecBundle(
+            step_kind="skip", args=(), meta={},
+            skip_reason=f"{cfg.name} is encoder-only: no decode step (DESIGN.md)",
+        )
+
+    meta = dict(arch=cfg.name, shape=shape_name, seq=seq, global_batch=gb,
+                mesh=dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))))
+
+    if kind == "train":
+        K = fed_client_count(cfg, mesh)
+        if cfg.fed_mode == "vmap":
+            b = max(gb // K, 1)
+        else:
+            b = gb
+        lead = (K, steps_per_round, b)
+        batch = _token_batch_specs(cfg, mesh, lead=lead, seq=seq, client_axis=True)
+        params = param_specs(model, mesh, client_axis=False)
+        rep = reputation_specs(K, mesh)
+        n_k = _sds((K,), jnp.float32, mesh, P())
+        meta.update(num_clients=K, local_steps=steps_per_round, per_client_batch=b,
+                    fed_mode=cfg.fed_mode)
+        return SpecBundle("train", (params, rep, n_k, batch), meta)
+
+    if kind == "prefill":
+        batch = _token_batch_specs(cfg, mesh, lead=(gb,), seq=seq, client_axis=False)
+        params = param_specs(model, mesh)
+        if cfg.is_encoder:
+            return SpecBundle("forward", (params, batch), meta)
+        # VLM prefill also caches the image-prefix positions
+        meta.update(cache_size=seq + (cfg.prefix_len if cfg.family == "vlm" else 0))
+        return SpecBundle("prefill", (params, batch), meta)
+
+    # decode kinds
+    params = param_specs(model, mesh)
+    if kind == "long_decode":
+        if cfg.family in ("ssm",):
+            cache_size, ring = 1, False  # ssm cache ignores seq len
+        else:
+            if not cfg.sliding_window:
+                return SpecBundle(
+                    "skip", (), meta,
+                    skip_reason=f"{cfg.name}: full attention at 500k is quadratic; "
+                    "no sliding-window variant configured (DESIGN.md)",
+                )
+            cache_size, ring = cfg.sliding_window, True
+    else:
+        cache_size, ring = seq, False
+    cache = cache_specs(model, mesh, gb, cache_size)
+    tokens = _sds((gb,), jnp.int32, mesh,
+                  batch_pspec((gb,), mesh, client_axis=False, per_client_batch=False))
+    pos = _sds((gb,), jnp.int32, mesh,
+               batch_pspec((gb,), mesh, client_axis=False, per_client_batch=False))
+    meta.update(cache_size=cache_size, ring=ring)
+    return SpecBundle("decode", (params, cache, tokens, pos), meta)

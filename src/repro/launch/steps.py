@@ -1,0 +1,65 @@
+"""Step builders: the jittable functions the dry-run lowers and the real
+launcher runs.  One builder per step kind; all return functions whose
+positional args match ``repro.launch.specs.input_specs`` order."""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.afa import AFAConfig
+from repro.fed.distributed import FedRoundConfig, make_fed_round
+from repro.launch.specs import LOCAL_STEPS, fed_client_count
+
+
+def make_train_step(model, mesh, *, afa_variant: str = "iterative",
+                    lr: float = 0.02, proposal_dtype: str = "bfloat16",
+                    local_steps: int = LOCAL_STEPS, microbatch: int = 1):
+    from repro.launch.mesh import data_axes
+
+    cfg = model.config
+    K = fed_client_count(cfg, mesh)
+    fr_cfg = FedRoundConfig(
+        num_clients=K,
+        local_steps=local_steps,
+        lr=lr,
+        afa=AFAConfig(variant=afa_variant, max_rounds=1 if cfg.fed_mode == "remat" else 4),
+        mode=cfg.fed_mode,
+        proposal_dtype=proposal_dtype,
+        microbatch=microbatch,
+        client_axes=data_axes(mesh) if cfg.fed_mode == "vmap" else None,
+    )
+    return make_fed_round(model, fr_cfg)
+
+
+def make_prefill_step(model, *, cache_size: int, use_window: bool = False):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_size=cache_size, use_window=use_window)
+
+    return prefill_step
+
+
+def make_forward_step(model):
+    def forward_step(params, batch):
+        return model.forward(params, batch)
+
+    return forward_step
+
+
+def make_serve_step(model, *, ring: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ring=ring)
+
+    return serve_step
+
+
+def build_step(model, bundle, mesh, **train_kwargs):
+    """SpecBundle -> concrete step function."""
+    if bundle.step_kind == "train":
+        return make_train_step(model, mesh, **train_kwargs)
+    if bundle.step_kind == "prefill":
+        return make_prefill_step(model, cache_size=bundle.meta["cache_size"])
+    if bundle.step_kind == "forward":
+        return make_forward_step(model)
+    if bundle.step_kind == "decode":
+        return make_serve_step(model, ring=bundle.meta["ring"])
+    raise ValueError(bundle.step_kind)

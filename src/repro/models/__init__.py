@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, validate
+from repro.models.model import Model, build_model
+
+__all__ = ["ModelConfig", "validate", "Model", "build_model"]

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    cosine_schedule,
+    linear_warmup,
+    sgd_momentum,
+)
+
+__all__ = ["OptState", "sgd_momentum", "adamw", "cosine_schedule", "linear_warmup"]

@@ -1,0 +1,113 @@
+"""Minimal pure-JAX optimizers (no optax in the container).
+
+API mirrors optax: ``opt = sgd_momentum(lr, momentum)``;
+``state = opt.init(params)``; ``updates, state = opt.update(grads, state,
+params)``; apply with ``tree_axpy(1.0, updates, params)`` (updates already
+carry the negative sign).
+
+The paper trains clients with SGD(lr, momentum=0.9); AdamW is provided for
+the LLM-scale configs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any = None
+    nu: Any = None
+
+
+def _tree_zeros(params, dtype=None):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def sgd_momentum(lr, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), mu=_tree_zeros(params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        if weight_decay and params is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            )
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state.mu, grads
+        )
+        lr_t = lr_fn(step)
+        upd = jax.tree_util.tree_map(lambda m: (-lr_t * m), mu)
+        return upd, OptState(step=step, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_tree_zeros(params, jnp.float32),
+            nu=_tree_zeros(params, jnp.float32),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd_leaf(m, n, p):
+            u = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        upd = jax.tree_util.tree_map(upd_leaf, mu, nu, params)
+        return upd, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * warm * cos
+
+    return fn

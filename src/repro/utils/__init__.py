@@ -1,0 +1,25 @@
+from repro.utils.trees import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    flatten_to_matrix,
+    unflatten_from_vector,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_dot",
+    "tree_norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_size",
+    "flatten_to_matrix",
+    "unflatten_from_vector",
+]

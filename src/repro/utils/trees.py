@@ -1,0 +1,94 @@
+"""Pytree linear-algebra helpers.
+
+The federated layer treats a model update as a vector in R^d, but at scale the
+update lives as a sharded pytree.  These helpers implement the handful of
+vector-space ops the aggregation rules need (dot products, norms, axpy) without
+ever materializing the flattened vector, so parameter shardings are preserved
+under pjit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def tree_dot(a, b, *, axes=None, dtype=jnp.float32):
+    """Sum of elementwise products across all leaves.
+
+    If ``axes`` is given (e.g. client axis in a stacked tree), the contraction
+    keeps those leading axes: leaves shaped ``(K, ...)`` produce a ``(K,)``
+    result.
+    """
+    total = None
+    for la, lb in zip(_leaves(a), _leaves(b)):
+        la = la.astype(dtype)
+        lb = lb.astype(dtype)
+        if axes is None:
+            part = jnp.sum(la * lb)
+        else:
+            keep = axes
+            red = tuple(range(keep, la.ndim))
+            part = jnp.sum(la * lb, axis=red)
+        total = part if total is None else total + part
+    return total
+
+
+def tree_norm(a, *, axes=None, dtype=jnp.float32):
+    return jnp.sqrt(tree_dot(a, a, axes=axes, dtype=dtype))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree_util.tree_map(lambda x: (s * x.astype(jnp.result_type(s, x))).astype(x.dtype), a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x, leafwise (in y's dtype)."""
+    return jax.tree_util.tree_map(
+        lambda lx, ly: (ly + s * lx.astype(ly.dtype)).astype(ly.dtype), x, y
+    )
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), a
+    )
+
+
+def tree_size(a) -> int:
+    return int(sum(np.prod(l.shape) for l in _leaves(a)))
+
+
+def flatten_to_matrix(stacked_tree, num_rows: int):
+    """Stacked tree with leading client axis K -> dense (K, d) matrix.
+
+    Only used at simulator scale (paper-repro experiments and kernels); the
+    distributed path stays tree-form.
+    """
+    rows = [jnp.reshape(l, (num_rows, -1)) for l in _leaves(stacked_tree)]
+    return jnp.concatenate(rows, axis=1)
+
+
+def unflatten_from_vector(vec, template):
+    """Inverse of flatten for a single (d,) vector against a template tree."""
+    leaves = _leaves(template)
+    treedef = jax.tree_util.tree_structure(template)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(jnp.reshape(vec[off : off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,39 @@
+"""CLI integration tests: the train and serve launchers run end-to-end on
+reduced configs in-process (single device)."""
+
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+
+def test_train_cli_reduced(tmp_path):
+    rc = train_main([
+        "--arch", "smollm-135m", "--reduced", "--rounds", "2", "--clients", "4",
+        "--local-steps", "1", "--batch", "1", "--seq", "32",
+        "--ckpt", str(tmp_path / "ck.msgpack"),
+    ])
+    assert rc == 0
+    assert (tmp_path / "ck.msgpack").exists()
+
+
+def test_train_cli_byzantine_screens_clients(capsys):
+    rc = train_main([
+        "--arch", "smollm-135m", "--reduced", "--rounds", "2", "--clients", "4",
+        "--local-steps", "2", "--batch", "2", "--seq", "64", "--byzantine", "1",
+    ])
+    assert rc == 0
+    out = capsys.readouterr().out
+    # 1 of 4 clients screened -> good_frac 0.75 printed at least once
+    assert "good_frac=0.75" in out
+
+
+def test_serve_cli_linear_and_ring(capsys):
+    for extra in ([], ["--ring"]):
+        rc = serve_main([
+            "--arch", "smollm-135m", "--reduced", "--requests", "2", "--batch", "2",
+            "--prompt-len", "16", "--gen", "4", *extra,
+        ])
+        assert rc == 0
+    out = capsys.readouterr().out
+    assert "linear cache" in out or "ring cache" in out

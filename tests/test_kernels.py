@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps + hypothesis property tests, all allclose
+against the pure-jnp oracles in repro.kernels.ref (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import coord_median, cosine_sim, gram, weighted_sum, pairwise_sq_dists_from_gram
+from repro.kernels.ref import (
+    coord_median_ref,
+    cosine_sim_ref,
+    gram_ref,
+    weighted_sum_ref,
+)
+
+RNG = np.random.default_rng(42)
+
+SHAPES = [(4, 128), (10, 1000), (16, 2048), (7, 4097), (32, 300), (100, 513)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(K, d, dtype):
+    return jnp.asarray(RNG.normal(size=(K, d)), dtype=dtype)
+
+
+@pytest.mark.parametrize("K,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cosine_sim(K, d, dtype):
+    u = _mk(K, d, dtype)
+    w = jnp.asarray(RNG.normal(size=(d,)), dtype=dtype)
+    out = cosine_sim(u, w)
+    ref = cosine_sim_ref(u, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("K,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram(K, d, dtype):
+    u = _mk(K, d, dtype)
+    out = gram(u)
+    ref = gram_ref(u)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("K,d", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_coord_median(K, d, dtype):
+    u = _mk(K, d, dtype)
+    out = coord_median(u)
+    ref = coord_median_ref(u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_coord_median_with_ties():
+    u = jnp.asarray(RNG.integers(-2, 3, size=(9, 257)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(coord_median(u)), np.median(np.asarray(u), axis=0), atol=1e-6
+    )
+    u2 = jnp.asarray(RNG.integers(-2, 3, size=(8, 130)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(coord_median(u2)), np.median(np.asarray(u2), axis=0), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("K,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_weighted_sum(K, d, dtype):
+    u = _mk(K, d, dtype)
+    c = jnp.asarray(RNG.uniform(0, 1, size=(K,)).astype(np.float32))
+    out = weighted_sum(c, u)
+    ref = weighted_sum_ref(u, c)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol * K)
+
+
+def test_pairwise_from_gram_matches_direct():
+    u = _mk(12, 777, jnp.float32)
+    d2 = pairwise_sq_dists_from_gram(gram(u))
+    un = np.asarray(u)
+    ref = ((un[:, None, :] - un[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(d2), ref, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------- hypothesis properties ---------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    K=st.integers(2, 24),
+    d=st.integers(1, 700),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cosine_sim_property(K, d, seed):
+    r = np.random.default_rng(seed)
+    u = jnp.asarray(r.normal(size=(K, d)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(d,)).astype(np.float32))
+    out = np.asarray(cosine_sim(u, w))
+    # bounded in [-1, 1] and matches oracle
+    assert (out <= 1.0 + 1e-5).all() and (out >= -1.0 - 1e-5).all()
+    np.testing.assert_allclose(out, np.asarray(cosine_sim_ref(u, w)), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    K=st.integers(2, 16),
+    d=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coord_median_property(K, d, seed):
+    r = np.random.default_rng(seed)
+    u = jnp.asarray(r.normal(size=(K, d)).astype(np.float32))
+    out = np.asarray(coord_median(u))
+    np.testing.assert_allclose(out, np.median(np.asarray(u), axis=0), rtol=1e-5, atol=1e-5)
+    # median is permutation-invariant across clients
+    perm = r.permutation(K)
+    out_p = np.asarray(coord_median(u[perm]))
+    np.testing.assert_allclose(out, out_p, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(2, 16), d=st.integers(1, 400), seed=st.integers(0, 2**31 - 1))
+def test_gram_psd_property(K, d, seed):
+    r = np.random.default_rng(seed)
+    u = jnp.asarray(r.normal(size=(K, d)).astype(np.float32))
+    g = np.asarray(gram(u))
+    np.testing.assert_allclose(g, g.T, atol=1e-4)
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() > -1e-2 * max(1.0, evals.max())
+
+
+# ------------------------- pallas flash attention ---------------------------
+
+
+@pytest.mark.parametrize("b,lq,lk,hq,hkv,d", [
+    (2, 64, 64, 4, 2, 32),
+    (1, 100, 100, 2, 1, 64),
+    (2, 33, 65, 4, 4, 16),
+    (1, 256, 256, 8, 2, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_pallas_flash_attention(b, lq, lk, hq, hkv, d, causal):
+    from repro.kernels import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    if causal and lq != lk:
+        pytest.skip("causal oracle assumes aligned ends")
+    r = np.random.default_rng(hash((b, lq, hq, causal)) % 2**31)
+    q = jnp.asarray(r.normal(size=(b, lq, hq, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, lk, hkv, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, lk, hkv, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    lq=st.integers(4, 80),
+    hq=st.sampled_from([2, 4]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_flash_attention_property(lq, hq, d, seed):
+    from repro.kernels import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(1, lq, hq, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(1, lq, hq, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(1, lq, hq, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,166 @@
+"""Launch-layer tests: sharding rules, specs, HLO analyzer, and a subprocess
+dry-run on a small multi-device CPU mesh (tests themselves see 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (
+    analyze,
+    computation_multipliers,
+    shape_bytes,
+    split_computations,
+)
+from repro.launch.sharding import param_pspec
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape.keys())
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+# ----------------------------- sharding rules --------------------------------
+
+
+def test_attention_params_shard_heads_on_model():
+    assert param_pspec("layers/attn/wq", (32, 4096, 4096), MESH, num_stack_axes=1) == P(None, None, "model")
+    assert param_pspec("layers/attn/wo", (32, 4096, 4096), MESH, num_stack_axes=1) == P(None, "model", None)
+
+
+def test_mlp_ff_on_model():
+    assert param_pspec("layers/mlp/up", (32, 4096, 14336), MESH, num_stack_axes=1) == P(None, None, "model")
+    assert param_pspec("layers/mlp/down", (32, 14336, 4096), MESH, num_stack_axes=1) == P(None, "model", None)
+
+
+def test_moe_experts_on_model():
+    assert param_pspec("layers/moe/up", (32, 16, 4096, 6400), MESH, num_stack_axes=1) == P(None, "model", None, None)
+    assert param_pspec("layers/moe/router", (32, 4096, 16), MESH, num_stack_axes=1) == P(None, None, None)
+
+
+def test_vocab_on_model():
+    assert param_pspec("embed", (128256, 4096), MESH) == P("model", None)
+    assert param_pspec("head", (4096, 128256), MESH) == P(None, "model")
+
+
+def test_norms_replicated():
+    assert param_pspec("layers/norm_attn", (32, 4096), MESH, num_stack_axes=1) == P(None, None)
+    assert param_pspec("final_norm", (4096,), MESH) == P(None)
+
+
+def test_client_axis_on_data():
+    spec = param_pspec("layers/attn/wq", (16, 32, 4096, 4096), MESH,
+                       num_stack_axes=1, client_axis=True)
+    assert spec == P(("data",), None, None, "model")
+
+
+def test_client_axis_multipod():
+    spec = param_pspec("layers/attn/wq", (32, 32, 4096, 4096), MESH3,
+                       num_stack_axes=1, client_axis=True)
+    assert spec == P(("pod", "data"), None, None, "model")
+
+
+def test_fsdp_shards_second_dim():
+    spec = param_pspec("layers/mlp/up", (96, 18432, 73728), MESH,
+                       num_stack_axes=1, fsdp=True)
+    assert spec == P(None, ("data",), "model")
+
+
+def test_indivisible_falls_back_replicated():
+    # 570 not divisible by 16 -> feature dim stays replicated
+    assert param_pspec("layers/attn/wq", (30, 570, 570), MESH, num_stack_axes=1) == P(None, None, None)
+
+
+# ------------------------------ HLO analyzer ---------------------------------
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[10]{0}") == 20
+    assert shape_bytes("(s32[], f32[2,2]{1,0}, /*index=5*/pred[8]{0})") == 4 + 16 + 8
+    assert shape_bytes("pred[]") == 1
+
+
+HLO_SAMPLE = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %w = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %dot.1 = f32[128,128]{1,0} dot(%w, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups={}, to_apply=%sum.1
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%p, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  ROOT %c = pred[] compare(%p, %p), direction=LT
+}
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128]{1,0} parameter(0)
+  %init = (s32[], f32[128,128]{1,0}) tuple(%a, %a)
+  %wh = (s32[], f32[128,128]{1,0}) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"24"}}
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_body():
+    res = analyze(HLO_SAMPLE)
+    # dot: 2 * 128*128 * 128 flops, 24 trips
+    assert res["dot_flops_scaled"] == 2 * 128 * 128 * 128 * 24
+    assert res["collective_bytes_total"] == 128 * 128 * 4 * 24
+    assert res["collective_counts"]["all-reduce"] == 24
+
+
+def test_multipliers_entry_is_one():
+    comps = split_computations(HLO_SAMPLE)
+    mult = computation_multipliers(HLO_SAMPLE, comps)
+    assert mult[comps["__entry__"]] == 1.0
+    assert mult["body.1"] == 24.0
+
+
+# --------------------------- subprocess dry-run -------------------------------
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-135m", "train_4k"),
+    ("olmoe-1b-7b", "decode_32k"),
+    ("mamba2-1.3b", "long_500k"),
+    ("hubert-xlarge", "decode_32k"),  # -> documented skip
+])
+def test_dryrun_subprocess_small_mesh(tmp_path, arch, shape):
+    """Run the real dryrun entrypoint on a 2x2 CPU mesh in a subprocess (the
+    test process itself keeps 1 device)."""
+    assert len(jax.devices()) == 1, "tests must not see the forced device count"
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "4"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "test", "--out", str(tmp_path), "--force"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__test.json"))
+    if arch == "hubert-xlarge":
+        assert rec["status"] == "skip"
+        assert "encoder-only" in rec["skip_reason"]
+    else:
+        assert rec["status"] == "ok", rec.get("error")
+        assert rec["memory"]["temp_bytes"] > 0
+        assert rec["hlo"]["dot_flops_scaled"] > 0
+        assert rec["analytic"]["analytic_flops"] > 0

@@ -1,0 +1,266 @@
+"""Model-zoo behaviour tests: forward/loss finiteness, prefill==forward,
+incremental decode == teacher-forced forward, sliding-window equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+
+RNG = np.random.default_rng(7)
+B, L, V = 2, 48, 96
+
+
+def lm_batch(l=L):
+    tok = jnp.asarray(RNG.integers(0, V, (B, l)), jnp.int32)
+    lab = jnp.asarray(RNG.integers(0, V, (B, l)), jnp.int32)
+    return {"tokens": tok, "labels": lab}
+
+
+DENSE = ModelConfig(
+    name="t-dense", family="dense", num_layers=2, d_model=64, vocab_size=V,
+    num_heads=4, num_kv_heads=2, d_ff=128, block_q=16, block_k=16,
+)
+# capacity_factor = E/k makes dispatch dropless -> decode matches forward
+MOE = DENSE.with_(name="t-moe", family="moe", num_experts=4, top_k=2, capacity_factor=2.0)
+SSM = ModelConfig(
+    name="t-ssm", family="ssm", num_layers=2, d_model=64, vocab_size=V,
+    ssm_state=16, ssm_head_dim=32, ssm_chunk=16,
+)
+HYBRID = ModelConfig(
+    name="t-hybrid", family="hybrid", num_layers=5, d_model=64, vocab_size=V,
+    num_heads=4, num_kv_heads=4, d_ff=128, ssm_state=16, ssm_head_dim=32,
+    ssm_chunk=16, shared_attn_every=2, block_q=16, block_k=16,
+)
+VLM = ModelConfig(
+    name="t-vlm", family="vlm", num_layers=2, d_model=64, vocab_size=V,
+    num_heads=4, num_kv_heads=1, d_ff=128, frontend="patch", frontend_dim=32,
+    prefix_len=8, block_q=16, block_k=16,
+)
+AUDIO = ModelConfig(
+    name="t-audio", family="audio", num_layers=2, d_model=64, vocab_size=V,
+    num_heads=4, num_kv_heads=4, d_ff=128, frontend="frame", frontend_dim=24,
+    causal=False, block_q=16, block_k=16,
+)
+ALL = [DENSE, MOE, SSM, HYBRID, VLM, AUDIO]
+
+
+def make_batch(cfg, l=L):
+    b = lm_batch(l)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.asarray(
+            RNG.normal(size=(B, cfg.prefix_len, cfg.frontend_dim)), jnp.float32
+        )
+    if cfg.family == "audio":
+        b = {
+            "frame_embeds": jnp.asarray(RNG.normal(size=(B, l, cfg.frontend_dim)), jnp.float32),
+            "labels": b["labels"],
+        }
+    return b
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_loss_finite_and_grads_flow(cfg):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(m.loss_fn, has_aux=True)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2)) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_forward_shapes(cfg):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg)
+    logits = m.forward(params, batch)
+    exp_l = L + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_l, V)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("cfg", [DENSE, MOE, SSM, HYBRID, VLM], ids=lambda c: c.name)
+def test_incremental_decode_matches_forward(cfg):
+    """prefill on L tokens then decode tokens one by one == teacher forcing."""
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(2))
+    batch = make_batch(cfg)
+    full_logits = m.forward(params, batch)  # (B, Lfull, V)
+    lp, cache = m.prefill(params, batch, cache_size=full_logits.shape[1] + 8)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full_logits[:, -1]), rtol=2e-3, atol=2e-3)
+    # decode the next 4 tokens teacher-forced and compare against a longer forward
+    extra = jnp.asarray(RNG.integers(0, V, (B, 4)), jnp.int32)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], extra], axis=1)
+    full2 = m.forward(params, batch2)
+    logits_t = lp
+    for t in range(4):
+        # position of prediction for extra[t] in full2
+        pos_in_full = full_logits.shape[1] + t
+        logits_t, cache = m.decode_step(params, cache, extra[:, t])
+        np.testing.assert_allclose(
+            np.asarray(logits_t), np.asarray(full2[:, pos_in_full]), rtol=5e-3, atol=5e-3,
+            err_msg=f"decode step {t} ({cfg.name})",
+        )
+
+
+def test_sliding_window_matches_full_when_window_covers():
+    cfg = DENSE.with_(sliding_window=64)  # window >= L: identical to causal
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(3))
+    batch = make_batch(cfg)
+    full = m.forward(params, batch, use_window=False)
+    win = m.forward(params, batch, use_window=True)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(full), rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_restricts_context():
+    cfg = DENSE.with_(sliding_window=8)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(4))
+    b1 = make_batch(cfg)
+    # perturb early tokens: outputs at the end must not change (window=8)
+    tok2 = b1["tokens"].at[:, 0:4].set((b1["tokens"][:, 0:4] + 1) % V)
+    out1 = m.forward(params, {"tokens": b1["tokens"]}, use_window=True)
+    out2 = m.forward(params, {"tokens": tok2}, use_window=True)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, -8:]), np.asarray(out2[:, -8:]), rtol=1e-4, atol=1e-4
+    )
+    # sanity: full attention DOES change
+    f1 = m.forward(params, {"tokens": b1["tokens"]})
+    f2 = m.forward(params, {"tokens": tok2})
+    assert np.abs(np.asarray(f1[:, -1]) - np.asarray(f2[:, -1])).max() > 1e-5
+
+
+def test_ring_buffer_decode_matches_window_decode():
+    """Decode with a ring cache of size `window` == windowed forward."""
+    w = 16
+    cfg = DENSE.with_(sliding_window=w)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(5))
+    l = 40
+    batch = make_batch(cfg, l)
+    full = m.forward(params, {"tokens": batch["tokens"]}, use_window=True)
+    lp, cache = m.prefill(params, {"tokens": batch["tokens"]}, cache_size=w, use_window=True)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)
+    extra = jnp.asarray(RNG.integers(0, V, (B, 3)), jnp.int32)
+    toks2 = jnp.concatenate([batch["tokens"], extra], axis=1)
+    full2 = m.forward(params, {"tokens": toks2}, use_window=True)
+    for t in range(3):
+        logits_t, cache = m.decode_step(params, cache, extra[:, t], ring=True)
+        np.testing.assert_allclose(
+            np.asarray(logits_t), np.asarray(full2[:, l + t]), rtol=5e-3, atol=5e-3,
+            err_msg=f"ring decode step {t}",
+        )
+
+
+def test_audio_encoder_bidirectional():
+    m = build_model(AUDIO)
+    params = m.init(jax.random.PRNGKey(6))
+    batch = make_batch(AUDIO)
+    out1 = m.forward(params, batch)
+    # perturbing a LATE frame changes EARLY outputs (bidirectional)
+    fe = batch["frame_embeds"].at[:, -1].set(0.0)
+    out2 = m.forward(params, {**batch, "frame_embeds": fe})
+    assert np.abs(np.asarray(out1[:, 0]) - np.asarray(out2[:, 0])).max() > 1e-6
+
+
+def test_vlm_prefix_visible_to_text():
+    m = build_model(VLM)
+    params = m.init(jax.random.PRNGKey(7))
+    batch = make_batch(VLM)
+    out1 = m.forward(params, batch)
+    pe = batch["patch_embeds"].at[:, 0].set(0.0)
+    out2 = m.forward(params, {**batch, "patch_embeds": pe})
+    # image change must affect text logits
+    assert np.abs(np.asarray(out1[:, -1]) - np.asarray(out2[:, -1])).max() > 1e-6
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= k*E/E... generous capacity, moe output should
+    differ from zero and loss decreases under a few SGD steps."""
+    m = build_model(MOE)
+    params = m.init(jax.random.PRNGKey(8))
+    batch = make_batch(MOE)
+    loss_fn = jax.jit(lambda p: m.loss_fn(p, batch)[0])
+    grad_fn = jax.jit(jax.grad(lambda p: m.loss_fn(p, batch)[0]))
+    loss0 = float(loss_fn(params))
+    for _ in range(3):
+        g = grad_fn(params)
+        params = jax.tree_util.tree_map(lambda p_, g_: p_ - 0.05 * g_.astype(p_.dtype), params, g)
+    assert float(loss_fn(params)) < loss0
+
+
+def test_flash_attention_vs_naive_oracle():
+    from repro.models.attention import flash_attention
+
+    r = np.random.default_rng(11)
+    b, l, hq, hk, d = 2, 20, 6, 2, 8
+    q = jnp.asarray(r.normal(size=(b, l, hq, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, l, hk, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, l, hk, d)), jnp.float32)
+
+    def naive(causal, prefix):
+        g = hq // hk
+        qs = q.reshape(b, l, hk, g, d)
+        s = jnp.einsum("blhgd,bmhd->bhglm", qs, k) / np.sqrt(d)
+        if causal:
+            mask = jnp.tril(jnp.ones((l, l), bool))
+            if prefix:
+                mask = mask | (jnp.arange(l)[None, :] < prefix)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        return jnp.einsum("bhglm,bmhd->blhgd", p, v).reshape(b, l, hq, d)
+
+    for causal, prefix in [(True, 0), (False, 0), (True, 5)]:
+        out = flash_attention(q, k, v, causal=causal, prefix_len=prefix, block_q=8, block_k=8)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(naive(causal, prefix)), rtol=2e-4, atol=2e-4,
+            err_msg=f"causal={causal} prefix={prefix}",
+        )
+
+
+def test_sliding_window_vs_naive_oracle():
+    from repro.models.attention import sliding_window_attention
+
+    r = np.random.default_rng(12)
+    b, l, hq, hk, d, w = 2, 24, 4, 2, 8, 7
+    q = jnp.asarray(r.normal(size=(b, l, hq, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, l, hk, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, l, hk, d)), jnp.float32)
+    g = hq // hk
+    qs = q.reshape(b, l, hk, g, d)
+    s = jnp.einsum("blhgd,bmhd->bhglm", qs, k) / np.sqrt(d)
+    i, j = jnp.arange(l)[:, None], jnp.arange(l)[None, :]
+    mask = (j <= i) & (i - j < w)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    naive = jnp.einsum("bhglm,bmhd->blhgd", jax.nn.softmax(s, -1), v).reshape(b, l, hq, d)
+    out = sliding_window_attention(q, k, v, window=w, block_q=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(naive), rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_attention_backend_matches_pure_jax():
+    """cfg.use_pallas_attention routes apply_attn through the Pallas kernel
+    (interpret mode on CPU) — end-to-end logits must match the pure-JAX path."""
+    cfg = DENSE
+    m_jax = build_model(cfg)
+    m_pl = build_model(cfg.with_(use_pallas_attention=True))
+    params = m_jax.init(jax.random.PRNGKey(21))
+    batch = make_batch(cfg)
+    out_jax = m_jax.forward(params, batch)
+    out_pl = m_pl.forward(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(out_pl), np.asarray(out_jax), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_pallas_attention_backend_encoder():
+    cfg = AUDIO.with_(use_pallas_attention=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(22))
+    batch = make_batch(cfg)
+    logits = m.forward(params, batch)
+    assert bool(jnp.isfinite(logits).all())
