@@ -3,7 +3,7 @@ scale (K=100 clients, d = the MNIST DNN's 535,818 parameters).
 
 Also benchmarks the Pallas kernel variants (interpret mode on CPU — relative
 numbers only; on TPU these run compiled) and AFA's iterative-vs-gram variants
-(the beyond-paper one-shot Gram optimization, see EXPERIMENTS.md §Perf)."""
+(the beyond-paper one-shot Gram optimization, see DESIGN.md §Perf)."""
 
 from __future__ import annotations
 
@@ -13,8 +13,10 @@ import numpy as np
 from benchmarks.common import timeit
 from repro.core import (
     AFAConfig,
+    RuleOptions,
     afa_aggregate,
     comed_aggregate,
+    dispatch_rule_tree,
     fa_aggregate,
     mkrum_aggregate,
 )
@@ -32,8 +34,16 @@ def run(quick: bool = False) -> list[dict]:
         n_k = jnp.ones((K,), jnp.float32)
         p_k = jnp.full((K,), 0.5, jnp.float32)
 
+        # the round engine's aggregation path: same rows as a stacked pytree
+        # through the registry tree dispatch (AFA's native tree form)
+        tree_u = {"w": U.reshape(K, -1, 2)}
+        opts = RuleOptions(afa=AFAConfig())
+
         fns = {
             "fa": lambda u: fa_aggregate(u, n_k).aggregate,
+            "afa_tree_dispatch": lambda u: dispatch_rule_tree(
+                "afa", tree_u, n_k, p_k, opts=opts
+            ).aggregate["w"],
             "afa_iterative": lambda u: afa_aggregate(
                 u, n_k, p_k, config=AFAConfig(variant="iterative")
             ).aggregate,

@@ -29,7 +29,7 @@ OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments", "roofline.
 
 
 def analyze_record(r: dict) -> dict | None:
-    """IMPORTANT semantics (verified empirically, see EXPERIMENTS.md §Roofline):
+    """IMPORTANT semantics (verified empirically, see DESIGN.md §Perf, roofline semantics):
     after SPMD partitioning, compiled.cost_analysis(), memory_analysis() and
     every HLO shape are PER-DEVICE — no chip division here.  Global FLOPs =
     per-device x chips (used only for the 6ND utilization ratio).  The CPU
@@ -106,7 +106,7 @@ def run(quick: bool = False) -> list[dict]:
 
 def _fix_suggestion(a) -> str:
     """One sentence on what would move the dominant term down (per the
-    measured §Perf iterations in EXPERIMENTS.md)."""
+    measured iterations in DESIGN.md §Perf)."""
     shape, dom = a["shape"], a["dominant"]
     if dom == "collective":
         if shape == "train_4k":

@@ -1,0 +1,84 @@
+"""Looped-vs-batched round-engine comparison (the PR's headline number).
+
+Runs the full federated round (batch draw + local training + attacks +
+aggregation) under both simulator engines at K in {10, 50, 200} and reports
+per-round wall-clock.  The batched engine replaces K jit dispatches per round
+with one vmapped device program, so the gap widens with K.
+
+Emits ``BENCH_round_engine.json`` at the repo root (machine-readable record
+for the acceptance gate: >= 3x at K = 50 on CPU) in addition to the usual
+CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.data import make_mnist_like
+from repro.fed import ServerConfig, SimConfig, run_simulation
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_engine.json")
+
+DIM = 64
+HIDDEN = (64, 32)
+PER_CLIENT = 100  # samples per shard
+
+
+def _measure(data, K: int, engine: str, rounds: int) -> float:
+    """Median per-round wall time (s), after a 1-round compile warmup."""
+    # clean scenario: both engines train all K clients, so the comparison
+    # isolates the engine overhead (per-client dispatch + host round-trips
+    # vs one vmapped device program)
+    base = dict(
+        num_clients=K, scenario="clean", local_epochs=1,
+        batch_size=100, hidden=HIDDEN, dropout=False, seed=0, engine=engine,
+    )
+    cfg = ServerConfig(rule="afa", num_clients=K)
+    run_simulation(data, SimConfig(**base, rounds=1), cfg)  # warmup/compile
+    res = run_simulation(data, SimConfig(**base, rounds=rounds), cfg)
+    ts = sorted(res.round_times)
+    return ts[len(ts) // 2]
+
+
+def run(quick: bool = False) -> list[dict]:
+    ks = [10, 50] if quick else [10, 50, 200]
+    rounds = 2 if quick else 6
+    rows, record = [], []
+    for K in ks:
+        data = make_mnist_like(n_train=K * PER_CLIENT, n_test=200, dim=DIM)
+        t_looped = _measure(data, K, "looped", rounds)
+        t_batched = _measure(data, K, "batched", rounds)
+        speedup = t_looped / max(t_batched, 1e-9)
+        for name, t in [("looped", t_looped), ("batched", t_batched)]:
+            rows.append({
+                "name": f"round_engine/K{K}/{name}",
+                "us_per_call": round(t * 1e6, 1),
+                "derived": "",
+            })
+        rows.append({
+            "name": f"round_engine/K{K}/speedup",
+            "us_per_call": "",
+            "derived": f"batched={speedup:.1f}x_vs_looped",
+        })
+        record.append({
+            "K": K,
+            "looped_round_s": round(t_looped, 6),
+            "batched_round_s": round(t_batched, 6),
+            "speedup": round(speedup, 2),
+        })
+    with open(OUT_JSON, "w") as f:
+        json.dump({
+            "workload": {
+                "dim": DIM, "hidden": list(HIDDEN), "per_client": PER_CLIENT,
+                "scenario": "clean", "rule": "afa", "rounds_timed": rounds,
+            },
+            "results": record,
+        }, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

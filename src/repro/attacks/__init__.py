@@ -1,19 +1,29 @@
 from repro.attacks.attacks import (
     ATTACKS,
+    UPDATE_ATTACK_SCENARIOS,
     alie_update_attack,
+    alie_update_tree,
+    apply_update_attack,
     byzantine_update_attack,
+    byzantine_update_tree,
     flip_labels,
     ipm_update_attack,
+    ipm_update_tree,
     noisy_features,
     sign_flip_update_attack,
 )
 
 __all__ = [
     "ATTACKS",
+    "UPDATE_ATTACK_SCENARIOS",
     "byzantine_update_attack",
+    "byzantine_update_tree",
     "alie_update_attack",
+    "alie_update_tree",
+    "apply_update_attack",
     "flip_labels",
     "noisy_features",
     "ipm_update_attack",
+    "ipm_update_tree",
     "sign_flip_update_attack",
 ]

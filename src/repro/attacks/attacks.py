@@ -15,11 +15,24 @@ Two kinds of hooks:
                                inside the benign spread.  The paper names this
                                family as an open weakness; we include it to
                                probe AFA beyond its own evaluation.
+
+The update-level attacks come in two executable forms:
+  * legacy numpy helpers operating on flat ``(d,)`` / ``(K, d)`` arrays
+    (kept for analysis scripts and unit tests);
+  * jit-able *stacked-pytree transforms* (``*_update_tree`` and the
+    ``apply_update_attack`` dispatcher) operating on proposals with a leading
+    client axis on every leaf — the round-engine path (DESIGN.md §2).  Both
+    simulator engines route attacks through the tree transforms so their
+    trajectories agree on fixed seeds.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+UPDATE_ATTACK_SCENARIOS = ("byzantine", "alie", "ipm")
 
 
 def flip_labels(x: np.ndarray, y: np.ndarray, rng=None, target: int = 0):
@@ -67,3 +80,92 @@ ATTACKS = {
     "flipping": flip_labels,
     "noisy": noisy_features,
 }
+
+
+# ---------------------------------------------------------------------------
+# jit-able stacked-pytree transforms (the round-engine path)
+#
+# Proposals arrive as a pytree whose every leaf carries a leading client axis
+# K.  ``bad_mask`` / ``benign_mask`` are (K,) bools; behaviour is selected by
+# mask, never by Python branching over clients, so one jit call covers any
+# honest/attacker split.
+# ---------------------------------------------------------------------------
+
+
+def _row(mask, leaf):
+    """(K,) mask broadcast against a (K, ...) leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _masked_moments(leaf, benign, cnt):
+    w = _row(benign, leaf).astype(jnp.float32)
+    lf = leaf.astype(jnp.float32)
+    mu = jnp.sum(w * lf, axis=0) / cnt
+    var = jnp.sum(w * (lf - mu[None]) ** 2, axis=0) / cnt
+    return mu, var
+
+
+def byzantine_update_tree(proposals, w_prev, bad_mask, key, *, scale: float = 20.0):
+    """Bad rows <- w_t + N(0, scale^2 I); noise keyed per leaf so both engines
+    draw identical perturbations for a given (round, seed) key."""
+    leaves, treedef = jax.tree_util.tree_flatten(proposals)
+    prev = jax.tree_util.tree_leaves(w_prev)
+    out = []
+    for i, (l, p) in enumerate(zip(leaves, prev)):
+        noise = scale * jax.random.normal(
+            jax.random.fold_in(key, i), l.shape, jnp.float32
+        )
+        adv = (p.astype(jnp.float32)[None] + noise).astype(l.dtype)
+        out.append(jnp.where(_row(bad_mask, l), adv, l))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def alie_update_tree(proposals, bad_mask, benign_mask, *, z_max: float = 1.2):
+    """Bad rows <- mean − z_max·std of the *benign* rows (coordinate-wise)."""
+    cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
+
+    def leaf(l):
+        mu, var = _masked_moments(l, benign_mask, cnt)
+        adv = (mu - z_max * jnp.sqrt(var)).astype(l.dtype)
+        return jnp.where(_row(bad_mask, l), adv[None], l)
+
+    return jax.tree_util.tree_map(leaf, proposals)
+
+
+def ipm_update_tree(proposals, bad_mask, benign_mask, *, eps: float = 0.5):
+    """Bad rows <- −eps · mean(benign rows): inner-product manipulation."""
+    cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
+
+    def leaf(l):
+        w = _row(benign_mask, l).astype(jnp.float32)
+        mu = jnp.sum(w * l.astype(jnp.float32), axis=0) / cnt
+        return jnp.where(_row(bad_mask, l), (-eps * mu).astype(l.dtype)[None], l)
+
+    return jax.tree_util.tree_map(leaf, proposals)
+
+
+def apply_update_attack(
+    scenario: str,
+    proposals,
+    w_prev,
+    bad_mask,
+    benign_mask,
+    key,
+    *,
+    byzantine_scale: float = 20.0,
+    z_max: float = 1.2,
+    eps: float = 0.5,
+):
+    """Static dispatch (scenario is a Python string, resolved at trace time)
+    of the update-level attacks on stacked proposals.  Data-level scenarios
+    (clean/flipping/noisy) poison shards before training and are a no-op here.
+    """
+    if scenario == "byzantine":
+        return byzantine_update_tree(
+            proposals, w_prev, bad_mask, key, scale=byzantine_scale
+        )
+    if scenario == "alie":
+        return alie_update_tree(proposals, bad_mask, benign_mask, z_max=z_max)
+    if scenario == "ipm":
+        return ipm_update_tree(proposals, bad_mask, benign_mask, eps=eps)
+    return proposals

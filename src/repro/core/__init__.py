@@ -5,12 +5,17 @@ from repro.core.afa import AFAConfig, AFAResult, afa_aggregate, afa_aggregate_tr
 from repro.core.baselines import (
     RULES,
     AggResult,
+    RuleOptions,
+    RuleSpec,
     bulyan_aggregate,
     comed_aggregate,
+    dispatch_rule,
+    dispatch_rule_tree,
     fa_aggregate,
     mkrum_aggregate,
     norm_clip_aggregate,
     pairwise_sq_dists,
+    register_rule,
     trimmed_mean_aggregate,
 )
 from repro.core.extra_rules import (
@@ -34,6 +39,11 @@ __all__ = [
     "afa_aggregate_tree",
     "AggResult",
     "RULES",
+    "RuleOptions",
+    "RuleSpec",
+    "register_rule",
+    "dispatch_rule",
+    "dispatch_rule_tree",
     "fa_aggregate",
     "mkrum_aggregate",
     "comed_aggregate",

@@ -47,6 +47,10 @@ class AFAConfig(NamedTuple):
     max_rounds: int = 8       # fixed upper bound for lax.while_loop safety
     ddof: int = 0
     variant: str = "iterative"  # "iterative" | "gram"
+    # Route the hot ops (gram / cosine-sim / weighted-sum) through the Pallas
+    # kernels.  Honored on TPU only; other backends fall back to the jnp
+    # reference path (matrix form — the tree form is already XLA-fused).
+    use_kernels: bool = False
 
 
 class AFAResult(NamedTuple):
@@ -91,14 +95,26 @@ def afa_aggregate(
     mask0 = jnp.ones((K,), bool) if mask0 is None else mask0
     upd32 = updates.astype(jnp.float32)
     row_norms = jnp.linalg.norm(upd32, axis=1)
+    use_pallas = config.use_kernels and jax.default_backend() == "tpu"
 
     if config.variant == "gram":
-        gram = upd32 @ upd32.T  # (K, K) — single pass over d
+        if use_pallas:
+            from repro.kernels import gram as gram_kernel
+
+            gram = gram_kernel(upd32)
+        else:
+            gram = upd32 @ upd32.T  # (K, K) — single pass over d
 
         def sims(c):
             gc = gram @ c
             agg_norm = jnp.sqrt(jnp.maximum(c @ gc, EPS))
             return gc / (jnp.maximum(row_norms, EPS) * agg_norm)
+
+    elif use_pallas:
+        from repro.kernels import cosine_sim, weighted_sum
+
+        def sims(c):
+            return cosine_sim(upd32, weighted_sum(c, upd32))
 
     else:
 
@@ -124,7 +140,12 @@ def afa_aggregate(
         cond, body, (mask0, jnp.float32(config.xi0), jnp.bool_(True), jnp.int32(0), s0)
     )
     w = _weights(mask, p_k, n_k)
-    agg = (w @ upd32).astype(updates.dtype)
+    if use_pallas:
+        from repro.kernels import weighted_sum
+
+        agg = weighted_sum(w, upd32).astype(updates.dtype)
+    else:
+        agg = (w @ upd32).astype(updates.dtype)
     return AFAResult(aggregate=agg, good_mask=mask, rounds=rounds, similarities=s)
 
 
@@ -215,3 +236,32 @@ def afa_aggregate_tree(
     )
     agg = _stacked_weighted_sum(stacked_updates, _weights(mask, p_k, n_k))
     return AFAResult(aggregate=agg, good_mask=mask, rounds=rounds, similarities=s)
+
+
+# ---------------------------------------------------------------------------
+# registry hookup — AFA dispatches matrix AND native tree form (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def _default_p(p_k, K):
+    return jnp.full((K,), 0.5, jnp.float32) if p_k is None else p_k
+
+
+def _afa_matrix_rule(updates, n_k, p_k, mask, opts):
+    cfg = opts.afa if opts.afa is not None else AFAConfig(use_kernels=opts.use_kernels)
+    return afa_aggregate(
+        updates, n_k, _default_p(p_k, updates.shape[0]), mask0=mask, config=cfg
+    )
+
+
+def _afa_tree_rule(stacked, n_k, p_k, mask, opts):
+    cfg = opts.afa if opts.afa is not None else AFAConfig()
+    K = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    return afa_aggregate_tree(
+        stacked, n_k, _default_p(p_k, K), mask0=mask, config=cfg
+    )
+
+
+from repro.core.baselines import register_rule  # noqa: E402  (no cycle: baselines does not import afa)
+
+register_rule("afa", _afa_matrix_rule, _afa_tree_rule, updates_reputation=True)

@@ -1,11 +1,12 @@
-"""Baseline aggregation rules the paper compares against (plus extras).
+"""Baseline aggregation rules the paper compares against (plus extras) and the
+rule REGISTRY the server/engine dispatch through.
 
 All rules share the matrix-form signature ``rule(updates, n_k, p_k, mask) ->
 (K-masked aggregate vector, good_mask)`` so the simulator/server can swap them
 freely.  ``n_k`` / ``p_k`` are ignored by rules that do not use them (MKRUM,
 COMED, ... — the paper notes these disregard per-client data counts).
 
-Implemented:
+Implemented here:
   * FA            — Federated Averaging (McMahan et al. 2017)
   * MKRUM         — Multi-KRUM (Blanchard et al. 2017)
   * COMED         — coordinate-wise median (Yin et al. 2018)
@@ -13,12 +14,32 @@ Implemented:
   * BULYAN        — MKRUM selection + per-coordinate closest-to-median mean
                     (Mhamdi et al. 2018)
   * NORM_CLIP     — norm-clipped mean (beyond-paper defensive baseline)
+
+Registry (DESIGN.md §3): every dispatchable rule registers a ``RuleSpec``
+via ``register_rule``.  A spec carries a *matrix* form ``(updates (K,d), n_k,
+p_k, mask, opts) -> result`` and optionally a native *tree* form over stacked
+pytrees; ``dispatch_rule`` / ``dispatch_rule_tree`` are the single entry
+points (tree dispatch falls back to flatten -> matrix rule -> unflatten, all
+in jnp, so it stays device-resident under jit).  AFA and the extra rules
+register themselves on import (``repro.core`` imports everything).
+
+``use_kernels`` policy, uniform across ALL rules: when True *and* the backend
+is TPU, the hot ops (gram / cosine-sim / weighted-sum / coord-median) route
+through the Pallas kernels in ``repro.kernels``; on any other backend the
+flag falls back to this file's jnp reference path (interpret-mode Pallas is
+orders of magnitude slower than XLA on CPU).  Rules whose hot op has no
+kernel (trimmed-mean's sort, geomed/centered-clip's iterations) accept the
+flag for interface uniformity and always use the reference path.  comed's
+compare-count kernel computes an *unmasked* median, so its kernel route
+engages only where the mask is host-concrete (the matrix path, rows
+pre-selected); inside jit-traced tree dispatch comed uses the XLA sort
+reference.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,39 +52,63 @@ class AggResult(NamedTuple):
     good_mask: jnp.ndarray
 
 
+def _use_pallas(use_kernels: bool) -> bool:
+    """True iff the Pallas kernel route is both requested and profitable."""
+    return bool(use_kernels) and jax.default_backend() == "tpu"
+
+
 def _norm_weights(mask, w):
     c = jnp.where(mask, w, 0.0)
     return c / jnp.maximum(jnp.sum(c), EPS)
 
 
-@jax.jit
-def fa_aggregate(updates, n_k, p_k=None, mask=None) -> AggResult:
+def _weighted_rows(c, u32):
+    """(K,) @ (K, d) -> (d,), via the Pallas weighted-sum kernel on TPU."""
+    return (c @ u32).astype(jnp.float32)
+
+
+def _weighted_rows_kernel(c, u32):
+    from repro.kernels import weighted_sum
+
+    return weighted_sum(c, u32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernels",))
+def fa_aggregate(updates, n_k, p_k=None, mask=None, *, use_kernels: bool = False) -> AggResult:
     K = updates.shape[0]
     mask = jnp.ones((K,), bool) if mask is None else mask
     c = _norm_weights(mask, n_k.astype(jnp.float32))
-    return AggResult(
-        (c @ updates.astype(jnp.float32)).astype(updates.dtype), mask
-    )
+    u32 = updates.astype(jnp.float32)
+    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    return AggResult(ws(c, u32).astype(updates.dtype), mask)
 
 
-def pairwise_sq_dists(updates):
+def pairwise_sq_dists(updates, *, use_kernels: bool = False):
     """K×K squared euclidean distances via the Gram identity (one matmul)."""
     u = updates.astype(jnp.float32)
-    g = u @ u.T
+    if _use_pallas(use_kernels):
+        from repro.kernels import gram as gram_kernel
+
+        g = gram_kernel(u)
+    else:
+        g = u @ u.T
     sq = jnp.diag(g)
     d2 = sq[:, None] + sq[None, :] - 2.0 * g
     return jnp.maximum(d2, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("num_byzantine", "num_selected"))
+@functools.partial(
+    jax.jit, static_argnames=("num_byzantine", "num_selected", "use_kernels")
+)
 def mkrum_aggregate(
-    updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int, num_selected: int
+    updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int,
+    num_selected: int, use_kernels: bool = False
 ) -> AggResult:
     """Multi-KRUM: score_k = sum of the K−f−2 smallest distances to others;
     average the ``num_selected`` lowest-scoring updates."""
     K = updates.shape[0]
     mask = jnp.ones((K,), bool) if mask is None else mask
-    d2 = pairwise_sq_dists(updates)
+    d2 = pairwise_sq_dists(updates, use_kernels=use_kernels)
     big = jnp.float32(3.4e38)
     # self-distance and masked-out rows/cols excluded from neighbour sets
     off = jnp.where(jnp.eye(K, dtype=bool) | ~mask[None, :], big, d2)
@@ -77,14 +122,26 @@ def mkrum_aggregate(
     ranks = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
     sel = (ranks < m) & mask
     c = _norm_weights(sel, jnp.ones((K,), jnp.float32))
-    return AggResult((c @ updates.astype(jnp.float32)).astype(updates.dtype), sel)
+    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    return AggResult(ws(c, updates.astype(jnp.float32)).astype(updates.dtype), sel)
 
 
-@jax.jit
-def comed_aggregate(updates, n_k=None, p_k=None, mask=None) -> AggResult:
+@functools.partial(jax.jit, static_argnames=("use_kernels",))
+def comed_aggregate(updates, n_k=None, p_k=None, mask=None, *, use_kernels: bool = False) -> AggResult:
     """Coordinate-wise median across clients (masked rows pushed to ±inf in
-    balanced pairs so they never shift the median)."""
+    balanced pairs so they never shift the median).
+
+    The Pallas compare-count kernel computes an *unmasked* K-row median, so
+    the kernel route applies only when no rows are masked out; the registry
+    adapter row-selects on the host first when the mask is concrete.
+    """
     K, _ = updates.shape
+    if mask is None and _use_pallas(use_kernels):
+        from repro.kernels import coord_median
+
+        return AggResult(
+            coord_median(updates).astype(updates.dtype), jnp.ones((K,), bool)
+        )
     mask = jnp.ones((K,), bool) if mask is None else mask
     u = updates.astype(jnp.float32)
     m = jnp.sum(mask)
@@ -102,9 +159,13 @@ def comed_aggregate(updates, n_k=None, p_k=None, mask=None) -> AggResult:
     return AggResult(med.astype(updates.dtype), mask)
 
 
-@functools.partial(jax.jit, static_argnames=("trim",))
-def trimmed_mean_aggregate(updates, n_k=None, p_k=None, mask=None, *, trim: int) -> AggResult:
-    """Coordinate-wise mean after dropping ``trim`` extremes from both ends."""
+@functools.partial(jax.jit, static_argnames=("trim", "use_kernels"))
+def trimmed_mean_aggregate(
+    updates, n_k=None, p_k=None, mask=None, *, trim: int, use_kernels: bool = False
+) -> AggResult:
+    """Coordinate-wise mean after dropping ``trim`` extremes from both ends.
+    (Sort-based; no Pallas kernel — ``use_kernels`` is accepted but the jnp
+    reference is the only implementation.)"""
     K, _ = updates.shape
     mask = jnp.ones((K,), bool) if mask is None else mask
     u = jnp.where(mask[:, None], updates.astype(jnp.float32), jnp.inf)
@@ -117,15 +178,19 @@ def trimmed_mean_aggregate(updates, n_k=None, p_k=None, mask=None, *, trim: int)
     return AggResult(mean.astype(updates.dtype), mask)
 
 
-@functools.partial(jax.jit, static_argnames=("num_byzantine",))
-def bulyan_aggregate(updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int) -> AggResult:
+@functools.partial(jax.jit, static_argnames=("num_byzantine", "use_kernels"))
+def bulyan_aggregate(
+    updates, n_k=None, p_k=None, mask=None, *, num_byzantine: int,
+    use_kernels: bool = False
+) -> AggResult:
     """Bulyan: MKRUM-style selection of theta = K−2f updates, then per
     coordinate average the beta = theta−2f values closest to the median."""
     K, d = updates.shape
     mask = jnp.ones((K,), bool) if mask is None else mask
     theta = max(K - 2 * num_byzantine, 1)
     sel = mkrum_aggregate(
-        updates, mask=mask, num_byzantine=num_byzantine, num_selected=theta
+        updates, mask=mask, num_byzantine=num_byzantine, num_selected=theta,
+        use_kernels=use_kernels,
     ).good_mask
     med = comed_aggregate(updates, mask=sel).aggregate.astype(jnp.float32)
     dist = jnp.where(sel[:, None], jnp.abs(updates.astype(jnp.float32) - med[None]), jnp.inf)
@@ -141,8 +206,10 @@ def bulyan_aggregate(updates, n_k=None, p_k=None, mask=None, *, num_byzantine: i
     return AggResult(out.astype(updates.dtype), sel)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def norm_clip_aggregate(updates, n_k, p_k=None, mask=None, clip=None) -> AggResult:
+@functools.partial(jax.jit, static_argnames=("use_kernels",))
+def norm_clip_aggregate(
+    updates, n_k, p_k=None, mask=None, clip=None, *, use_kernels: bool = False
+) -> AggResult:
     """Clip each update to the masked-median norm, then weighted-average."""
     K = updates.shape[0]
     mask = jnp.ones((K,), bool) if mask is None else mask
@@ -154,14 +221,131 @@ def norm_clip_aggregate(updates, n_k, p_k=None, mask=None, clip=None) -> AggResu
     scale = jnp.minimum(1.0, c / jnp.maximum(norms, EPS))
     u = u * scale[:, None]
     w = _norm_weights(mask, n_k.astype(jnp.float32))
-    return AggResult((w @ u).astype(updates.dtype), mask)
+    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    return AggResult(ws(w, u).astype(updates.dtype), mask)
 
 
-RULES: dict[str, Callable] = {
-    "fa": fa_aggregate,
-    "mkrum": mkrum_aggregate,
-    "comed": comed_aggregate,
-    "trimmed_mean": trimmed_mean_aggregate,
-    "bulyan": bulyan_aggregate,
-    "norm_clip": norm_clip_aggregate,
-}
+# ---------------------------------------------------------------------------
+# rule registry — single dispatch interface for server and round engine
+# ---------------------------------------------------------------------------
+
+
+class RuleOptions(NamedTuple):
+    """Per-call rule knobs, hashable so the whole bundle can ride through jit
+    as a static argument.  ``afa`` holds an ``AFAConfig`` when rule == afa;
+    ``num_selected`` (MKRUM) must be host-computed from the concrete
+    participation count (it is a static shape-like parameter)."""
+
+    num_byzantine: int = 3
+    trim: int = 3
+    num_selected: int | None = None
+    use_kernels: bool = False
+    afa: Any = None  # AFAConfig | None (typed Any to avoid an import cycle)
+
+
+class RuleSpec(NamedTuple):
+    name: str
+    matrix_fn: Callable  # (updates, n_k, p_k, mask, opts) -> result
+    tree_fn: Callable | None = None  # (stacked_tree, n_k, p_k, mask, opts) -> result
+    updates_reputation: bool = False  # AFA: result drives the Beta posterior
+
+
+RULES: dict[str, RuleSpec] = {}
+
+
+def register_rule(
+    name: str,
+    matrix_fn: Callable,
+    tree_fn: Callable | None = None,
+    *,
+    updates_reputation: bool = False,
+) -> RuleSpec:
+    spec = RuleSpec(name, matrix_fn, tree_fn, updates_reputation)
+    RULES[name] = spec
+    return spec
+
+
+def dispatch_rule(name: str, updates, n_k, p_k=None, mask=None,
+                  opts: RuleOptions = RuleOptions()):
+    """Matrix-form dispatch: updates is (K, d).  Returns the rule's native
+    result (``.aggregate`` vector + ``.good_mask``, AFA adds extras)."""
+    try:
+        spec = RULES[name]
+    except KeyError:
+        raise ValueError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
+    return spec.matrix_fn(updates, n_k, p_k, mask, opts)
+
+
+def dispatch_rule_tree(name: str, stacked, n_k, p_k=None, mask=None,
+                       opts: RuleOptions = RuleOptions()):
+    """Tree-form dispatch: stacked is a pytree with a leading client axis on
+    every leaf.  Rules with a native tree form (AFA) keep the pytree; the rest
+    flatten to a matrix *inside jit* (pure jnp reshapes — device-resident, no
+    host round-trip) and unflatten the aggregate back.  The whole dispatch is
+    jit'd with (name, opts) static, so per-round host overhead is one cached
+    call."""
+    if name not in RULES:
+        raise ValueError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
+    return _dispatch_tree_jit(stacked, n_k, p_k, mask, name=name, opts=opts)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "opts"))
+def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str, opts: RuleOptions):
+    spec = RULES[name]
+    if spec.tree_fn is not None:
+        return spec.tree_fn(stacked, n_k, p_k, mask, opts)
+
+    from repro.utils.trees import flatten_to_matrix, unflatten_from_vector
+
+    leaves = jax.tree_util.tree_leaves(stacked)
+    K = leaves[0].shape[0]
+    res = spec.matrix_fn(flatten_to_matrix(stacked, K), n_k, p_k, mask, opts)
+    template = jax.tree_util.tree_map(lambda l: l[0], stacked)
+    return res._replace(aggregate=unflatten_from_vector(res.aggregate, template))
+
+
+def _mkrum_rule(u, n_k, p_k, mask, o: RuleOptions):
+    m_sel = o.num_selected
+    if m_sel is None:  # static fallback: assume full participation
+        m_sel = max(u.shape[0] - o.num_byzantine - 2, 1)
+    return mkrum_aggregate(
+        u, mask=mask, num_byzantine=o.num_byzantine, num_selected=m_sel,
+        use_kernels=o.use_kernels,
+    )
+
+
+def _comed_rule(u, n_k, p_k, mask, o: RuleOptions):
+    if (
+        _use_pallas(o.use_kernels)
+        and mask is not None
+        and not isinstance(mask, jax.core.Tracer)
+    ):
+        # host path with a concrete mask: row-select, then the Pallas kernel
+        import numpy as np
+
+        from repro.kernels import coord_median
+
+        sel = jnp.asarray(np.nonzero(np.asarray(mask))[0])
+        return AggResult(coord_median(u[sel]).astype(u.dtype), mask)
+    return comed_aggregate(u, mask=mask, use_kernels=o.use_kernels)
+
+
+register_rule(
+    "fa", lambda u, n, p, m, o: fa_aggregate(u, n, mask=m, use_kernels=o.use_kernels)
+)
+register_rule("mkrum", _mkrum_rule)
+register_rule("comed", _comed_rule)
+register_rule(
+    "trimmed_mean",
+    lambda u, n, p, m, o: trimmed_mean_aggregate(u, mask=m, trim=o.trim),
+)
+register_rule(
+    "bulyan",
+    lambda u, n, p, m, o: bulyan_aggregate(
+        u, mask=m, num_byzantine=o.num_byzantine, use_kernels=o.use_kernels
+    ),
+)
+register_rule(
+    "norm_clip",
+    lambda u, n, p, m, o: norm_clip_aggregate(u, n, mask=m, use_kernels=o.use_kernels),
+)

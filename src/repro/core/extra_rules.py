@@ -18,7 +18,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.baselines import AggResult, _norm_weights
+from repro.core.baselines import AggResult, _norm_weights, register_rule
 
 EPS = 1e-8
 
@@ -99,3 +99,12 @@ def zeno_aggregate(
     keep = (ranks < num_keep) & mask
     c = _norm_weights(keep, jnp.ones((K,), jnp.float32))
     return AggResult((c @ updates.astype(jnp.float32)).astype(updates.dtype), keep)
+
+
+# Registry hookup.  No Pallas kernel covers the Weiszfeld / clipping
+# iterations, so both rules always run the jnp reference regardless of
+# ``use_kernels``.  Zeno stays OUT of the registry: it needs a server-side
+# validation loss_fn + w_prev, which the uniform dispatch signature (and the
+# paper's trust model) does not carry.
+register_rule("geomed", lambda u, n, p, m, o: geometric_median_aggregate(u, mask=m))
+register_rule("centered_clip", lambda u, n, p, m, o: centered_clip_aggregate(u, mask=m))

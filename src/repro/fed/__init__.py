@@ -1,5 +1,6 @@
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_logits, dnn_loss, init_dnn
+from repro.fed.engine import EngineConfig, attack_key, client_keys, make_train_attack_step
 from repro.fed.server import FedServer, ServerConfig
 from repro.fed.simulator import SimConfig, SimResult, run_simulation
 
@@ -9,6 +10,10 @@ __all__ = [
     "dnn_logits",
     "dnn_loss",
     "dnn_error",
+    "EngineConfig",
+    "attack_key",
+    "client_keys",
+    "make_train_attack_step",
     "FedServer",
     "ServerConfig",
     "SimConfig",

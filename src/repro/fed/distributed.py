@@ -1,6 +1,6 @@
 """Distributed federated round — the paper's technique as a pjit-able step.
 
-Maps AFA onto the production mesh (see DESIGN.md §3):
+Maps AFA onto the production mesh (see DESIGN.md §4):
   * clients ↔ *data*-axis rows (vmap mode), each holding a model replica
     sharded over *model*; local SGD steps have no cross-client sync;
   * the robust aggregation IS the round's only collective: per-leaf partial
@@ -15,7 +15,7 @@ Three client-memory modes (cfg.fed_mode):
   * ``remat`` — proposals are never stored: 3 streaming passes (plain
     aggregate+norms → similarities → masked weighted sum), re-running client
     training instead of holding K×N bytes.  A federated-layer analogue of
-    activation rematerialization (beyond-paper; EXPERIMENTS.md §Perf).
+    activation rematerialization (beyond-paper; DESIGN.md §Perf).
     One screening round (Algorithm 1 with max_rounds=1) per fed round.
 """
 

@@ -1,0 +1,105 @@
+"""Device-resident round engine: vmapped client training over a stacked
+client axis (DESIGN.md §2).
+
+The looped simulator path dispatches one jit per client per round and
+round-trips every proposal through host numpy.  This engine replaces that
+with ONE jit call that:
+
+  1. **client layer** — vmaps ``local_sgd`` over stacked shards
+     (leaves ``(K, S, b, ...)``) and per-client RNG keys, training all K
+     clients in a single device program;
+  2. **selection by mask** — clients that do not train this round
+     (update-level attackers, blocked clients) are row-selected back to
+     ``w_t``, no Python branching over clients;
+  3. **proposal layer** — the update-level attacks (byzantine / alie / ipm)
+     run as jit-able transforms on the stacked proposal pytree
+     (``repro.attacks.apply_update_attack``), so proposals never leave the
+     device.
+
+Aggregation then goes through the registry tree dispatch
+(``FedServer.aggregate_tree`` -> ``repro.core.dispatch_rule_tree``): AFA
+consumes the stacked pytree natively; matrix-form rules flatten *inside jit*
+(pure jnp reshapes).  The per-round host work is reduced to drawing minibatch
+indices and the K-scalar reputation update.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attacks import apply_update_attack
+from repro.fed.client import local_sgd
+from repro.utils.trees import tree_broadcast_clients, tree_select_rows
+
+
+class EngineConfig(NamedTuple):
+    """Static (trace-time) knobs of the batched round step."""
+
+    scenario: str = "clean"      # clean | byzantine | flipping | noisy | alie | ipm
+    lr: float = 0.1
+    momentum: float = 0.9
+    dropout: bool = True
+    byzantine_scale: float = 20.0
+    alie_z_max: float = 1.2
+    ipm_eps: float = 0.5
+
+
+def client_keys(rnd: int, num_clients: int) -> jnp.ndarray:
+    """Stacked per-client RNG keys, identical to the looped engine's
+    ``PRNGKey(rnd * 1000 + k)`` so both engines draw the same dropout masks.
+
+    Built as one host array + a single device put (K eager ``PRNGKey`` calls
+    cost several ms per round at K = 50): a threefry key for seed s < 2^32 is
+    the (2,) uint32 pair [s >> 32, s & 0xffffffff] = [0, s].
+    """
+    seeds = np.uint64(rnd) * np.uint64(1000) + np.arange(num_clients, dtype=np.uint64)
+    pair = np.stack(
+        [(seeds >> np.uint64(32)).astype(np.uint32), seeds.astype(np.uint32)], axis=1
+    )
+    return jnp.asarray(pair)
+
+
+def attack_key(seed: int, rnd: int) -> jnp.ndarray:
+    """Per-round key for the update-level attack noise (shared by engines)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
+
+
+@functools.lru_cache(maxsize=64)
+def make_train_attack_step(loss_fn, cfg: EngineConfig):
+    """Build the jit'd proposal producer.
+
+    Returns ``step(params, batch, keys, train_mask, bad_mask, benign_mask,
+    akey) -> stacked proposals``, where ``batch`` leaves are
+    ``(K, S, b, ...)``, masks are ``(K,)`` bool, and the result is a pytree
+    with a leading client axis on every leaf.  Cached on (loss_fn, cfg) so
+    repeated simulations reuse the compiled step.
+    """
+
+    @jax.jit
+    def step(params, batch, keys, train_mask, bad_mask, benign_mask, akey):
+        K = train_mask.shape[0]
+
+        def train_one(cbatch, ckey):
+            return local_sgd(
+                loss_fn, params, cbatch, ckey,
+                lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
+            )
+
+        proposals = jax.vmap(train_one)(batch, keys)
+        # non-trainers hold w_t until the attack layer overwrites their row
+        proposals = tree_select_rows(
+            train_mask, proposals, tree_broadcast_clients(params, K)
+        )
+        return apply_update_attack(
+            cfg.scenario, proposals, params, bad_mask, benign_mask, akey,
+            byzantine_scale=cfg.byzantine_scale,
+            z_max=cfg.alie_z_max,
+            eps=cfg.ipm_eps,
+        )
+
+    return step

@@ -1,39 +1,47 @@
-"""Server-side aggregation: rule dispatch + AFA reputation/blocking state.
+"""Server-side aggregation: registry-based rule dispatch + AFA
+reputation/blocking state.
 
-The server consumes the K client proposals as a dense ``(K, d)`` matrix at
-simulator scale (tree-form lives in ``repro.fed.distributed`` for the mesh
-path).  AFA is the paper's rule; the others are the comparison baselines.
+The server consumes the K client proposals either as a dense ``(K, d)``
+matrix (``aggregate``, the paper-scale looped path) or as a stacked pytree
+with a leading client axis (``aggregate_tree``, the device-resident round
+engine — see DESIGN.md §2/§3).  Both routes go through the single
+``dispatch_rule`` / ``dispatch_rule_tree`` interface in ``repro.core``; AFA
+is the paper's rule, the others are the comparison baselines.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     AFAConfig,
-    centered_clip_aggregate,
-    geometric_median_aggregate,
-    afa_aggregate,
-    bulyan_aggregate,
-    comed_aggregate,
-    fa_aggregate,
+    RULES,
+    RuleOptions,
+    dispatch_rule,
+    dispatch_rule_tree,
     init_reputation,
-    mkrum_aggregate,
-    norm_clip_aggregate,
     p_good,
-    trimmed_mean_aggregate,
     update_reputation,
 )
 
 
+@functools.partial(jax.jit, static_argnames=("delta",))
+def _update_reputation_jit(rep, good_mask, mask0, *, delta: float):
+    # module-level so the compiled update is shared across server instances
+    return update_reputation(rep, good_mask, mask0, delta=delta)
+
+
 @dataclasses.dataclass
 class ServerConfig:
-    rule: str = "afa"            # afa | fa | mkrum | comed | trimmed_mean | bulyan
-                                 # | norm_clip | geomed | centered_clip
+    rule: str = "afa"            # any key of repro.core.RULES:
+                                 # afa | fa | mkrum | comed | trimmed_mean
+                                 # | bulyan | norm_clip | geomed | centered_clip
     num_clients: int = 10
     # AFA
     alpha0: float = 3.0
@@ -45,12 +53,21 @@ class ServerConfig:
     # baselines
     num_byzantine: int = 3       # f for mkrum/bulyan
     trim: int = 3                # for trimmed_mean
-    use_kernels: bool = False    # route hot ops through the Pallas kernels
+    # Route every rule's hot ops (gram / cosine-sim / weighted-sum /
+    # coord-median) through the Pallas TPU kernels.  Honored uniformly by all
+    # rules via the registry; on non-TPU backends the flag falls back to the
+    # jnp reference path (interpret-mode Pallas is far slower than XLA), so
+    # results are identical and only the TPU execution path changes.  One
+    # scoped exception: comed's compare-count kernel computes an *unmasked*
+    # median, so its kernel route engages on the matrix path (host-concrete
+    # mask, rows pre-selected); the in-jit tree dispatch uses the XLA sort
+    # reference (see DESIGN.md §3).
+    use_kernels: bool = False
 
 
 class FedServer:
-    """Holds the shared model vector + AFA reputation; one ``aggregate`` per
-    round.  Works on flat vectors; the caller owns (un)flattening."""
+    """Holds the shared model state + AFA reputation; one ``aggregate`` (or
+    ``aggregate_tree``) per round.  The caller owns model (un)flattening."""
 
     def __init__(self, config: ServerConfig):
         self.cfg = config
@@ -71,77 +88,80 @@ class FedServer:
         m = max(1, int(round(frac * len(avail))))
         return np.sort(rng.choice(avail, size=m, replace=False))
 
+    # -- dispatch plumbing ---------------------------------------------------
+    def participation_mask(self, selected: np.ndarray) -> np.ndarray:
+        mask0 = np.zeros(self.cfg.num_clients, bool)
+        mask0[selected] = True
+        mask0 &= ~self.blocked
+        return mask0
+
+    def rule_options(self, mask0: np.ndarray) -> RuleOptions:
+        """Host-side knob bundle for the registry (hashable -> jit-static).
+
+        ``num_selected`` is populated only for the rule that consumes it
+        (MKRUM) — it tracks the live participant count, and threading it into
+        every rule's options would retrace the jit'd dispatch each time a
+        client gets blocked.
+        """
+        c = self.cfg
+        return RuleOptions(
+            num_byzantine=c.num_byzantine,
+            trim=c.trim,
+            num_selected=(
+                max(int(mask0.sum()) - c.num_byzantine - 2, 1)
+                if c.rule == "mkrum" else None
+            ),
+            use_kernels=c.use_kernels,
+            afa=AFAConfig(
+                xi0=c.xi0, delta_xi=c.delta_xi, variant=c.afa_variant,
+                use_kernels=c.use_kernels,
+            ),
+        )
+
+    def absorb(self, good_mask, mask0) -> None:
+        """Fold one round's AFA screening outcome into the Beta posteriors and
+        the blocked set (host state).  The round engine calls this directly
+        with masks computed inside its jit step."""
+        self.reputation = _update_reputation_jit(
+            self.reputation, jnp.asarray(good_mask), jnp.asarray(mask0),
+            delta=self.cfg.delta_block,
+        )
+        newly_blocked = self.blocked & (self.rounds_blocked < 0)
+        self.rounds_blocked[newly_blocked] = self._round + 1
+
+    def _finish(self, res, mask0: np.ndarray):
+        """Shared post-dispatch bookkeeping for both proposal layouts."""
+        info = {"good_mask": np.asarray(res.good_mask)}
+        if RULES[self.cfg.rule].updates_reputation:
+            self.absorb(res.good_mask, jnp.asarray(mask0))
+            info.update(
+                rounds=int(res.rounds),
+                similarities=np.asarray(res.similarities),
+                blocked=self.blocked.copy(),
+                p_good=np.asarray(p_good(self.reputation)),
+            )
+        self._round += 1
+        return res.aggregate, info
+
     # -- aggregation ---------------------------------------------------------
     def aggregate(self, updates: jnp.ndarray, n_k: jnp.ndarray, selected: np.ndarray):
         """updates: (K, d) with rows outside ``selected`` ignored.
         Returns (aggregate vector, info dict)."""
-        c = self.cfg
-        K = c.num_clients
-        mask0 = np.zeros(K, bool)
-        mask0[selected] = True
-        mask0 &= ~self.blocked
-        mask0_j = jnp.asarray(mask0)
-        info = {}
+        mask0 = self.participation_mask(selected)
+        res = dispatch_rule(
+            self.cfg.rule, updates, jnp.asarray(n_k, jnp.float32),
+            p_good(self.reputation), jnp.asarray(mask0),
+            self.rule_options(mask0),
+        )
+        return self._finish(res, mask0)
 
-        if c.rule == "afa":
-            res = afa_aggregate(
-                updates,
-                jnp.asarray(n_k, jnp.float32),
-                p_good(self.reputation),
-                mask0=mask0_j,
-                config=AFAConfig(
-                    xi0=c.xi0, delta_xi=c.delta_xi, variant=c.afa_variant
-                ),
-            )
-            self.reputation = update_reputation(
-                self.reputation, res.good_mask, mask0_j, delta=c.delta_block
-            )
-            newly_blocked = self.blocked & (self.rounds_blocked < 0)
-            self.rounds_blocked[newly_blocked] = self._round + 1
-            info = {
-                "good_mask": np.asarray(res.good_mask),
-                "rounds": int(res.rounds),
-                "similarities": np.asarray(res.similarities),
-                "blocked": self.blocked.copy(),
-                "p_good": np.asarray(p_good(self.reputation)),
-            }
-            agg = res.aggregate
-        elif c.rule == "fa":
-            out = fa_aggregate(updates, jnp.asarray(n_k, jnp.float32), mask=mask0_j)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "mkrum":
-            m_sel = max(int(mask0.sum()) - c.num_byzantine - 2, 1)
-            out = mkrum_aggregate(
-                updates, mask=mask0_j, num_byzantine=c.num_byzantine, num_selected=m_sel
-            )
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "comed":
-            if c.use_kernels:
-                from repro.kernels import coord_median
-
-                sel = np.nonzero(mask0)[0]
-                agg = coord_median(updates[jnp.asarray(sel)]).astype(updates.dtype)
-                info["good_mask"] = mask0.copy()
-            else:
-                out = comed_aggregate(updates, mask=mask0_j)
-                agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "trimmed_mean":
-            out = trimmed_mean_aggregate(updates, mask=mask0_j, trim=c.trim)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "bulyan":
-            out = bulyan_aggregate(updates, mask=mask0_j, num_byzantine=c.num_byzantine)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "norm_clip":
-            out = norm_clip_aggregate(updates, jnp.asarray(n_k, jnp.float32), mask=mask0_j)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "geomed":
-            out = geometric_median_aggregate(updates, mask=mask0_j)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        elif c.rule == "centered_clip":
-            out = centered_clip_aggregate(updates, mask=mask0_j)
-            agg, info["good_mask"] = out.aggregate, np.asarray(out.good_mask)
-        else:
-            raise ValueError(f"unknown rule {c.rule}")
-
-        self._round += 1
-        return agg, info
+    def aggregate_tree(self, stacked, n_k: jnp.ndarray, selected: np.ndarray):
+        """Stacked-pytree layout: every leaf carries a leading client axis.
+        Returns (aggregate pytree, info dict)."""
+        mask0 = self.participation_mask(selected)
+        res = dispatch_rule_tree(
+            self.cfg.rule, stacked, jnp.asarray(n_k, jnp.float32),
+            p_good(self.reputation), jnp.asarray(mask0),
+            self.rule_options(mask0),
+        )
+        return self._finish(res, mask0)

@@ -1,42 +1,56 @@
 """Paper-scale federated simulator: K clients x T rounds over a synthetic
-dataset, with clean / byzantine / flipping / noisy scenarios — reproduces the
-paper's Tables 1-2 and the convergence figures.
+dataset, with clean / byzantine / flipping / noisy / alie / ipm scenarios —
+reproduces the paper's Tables 1-2 and the convergence figures.
 
-The simulator trains the paper's DNN with jit'd local SGD per client, flattens
-proposals into a (K, d) matrix and hands them to ``FedServer``.  Byzantine
-clients skip training entirely and send w_t + N(0, 20^2 I) (the paper's
-update-level fault); flipping/noisy clients poison their *shard* and train
-honestly on it.
+Two round engines (DESIGN.md §2), selected by ``SimConfig.engine``:
+
+  * ``batched`` (default) — the device-resident pipeline: one jit call vmaps
+    ``local_sgd`` over a stacked client axis, applies the update-level attacks
+    as stacked-pytree transforms on device, and aggregates through the
+    registry tree dispatch.  Proposals never round-trip through host numpy.
+  * ``looped`` — the reference path: one jit dispatch per client per round.
+    Aggregation goes through the same registry tree dispatch, so the engines
+    differ only in the client layer.  Kept for equivalence testing and as the
+    baseline of ``benchmarks/round_engine.py``.
+
+Both engines draw minibatch indices from the same host numpy stream and key
+the attack noise identically, so on fixed seeds they produce matching
+per-round trajectories (test error, ``good_mask`` history); see
+``tests/test_round_engine.py``.
+
+Byzantine clients skip training entirely and send w_t + N(0, 20^2 I) (the
+paper's update-level fault); flipping/noisy clients poison their *shard* and
+train honestly on it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.attacks import (
-    alie_update_attack,
+    UPDATE_ATTACK_SCENARIOS,
+    apply_update_attack,
     flip_labels,
-    ipm_update_attack,
     noisy_features,
 )
 from repro.data import SyntheticClassification, iid_shards
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
+from repro.fed.engine import EngineConfig, attack_key, client_keys, make_train_attack_step
 from repro.fed.server import FedServer, ServerConfig
-from repro.utils.trees import flatten_to_matrix, unflatten_from_vector
+from repro.utils.trees import tree_stack
 
 
 @dataclasses.dataclass
 class SimConfig:
     num_clients: int = 10
     bad_frac: float = 0.3
-    scenario: str = "clean"      # clean | byzantine | flipping | noisy | alie
+    scenario: str = "clean"      # clean | byzantine | flipping | noisy | alie | ipm
     rounds: int = 30
     local_epochs: int = 10
     batch_size: int = 200
@@ -48,18 +62,113 @@ class SimConfig:
     hidden: tuple = (512, 256)
     sharding: str = "iid"        # iid | dirichlet (non-IID label skew)
     dirichlet_alpha: float = 0.5
+    engine: str = "batched"      # batched | looped (reference)
 
 
 @dataclasses.dataclass
 class SimResult:
     test_error: list            # per round
-    train_time: float
-    agg_time: float
+    train_time: float           # mean per round: local training (+ attacks)
+    agg_time: float             # mean per round: server aggregation
     blocked_round: np.ndarray   # (K,) round at which blocked (-1 = never)
     bad_clients: np.ndarray     # indices
     good_mask_history: list
     detection_rate: float       # fraction of bad clients blocked by the end
     mean_rounds_to_block: float
+    round_time: float = 0.0     # mean per round: batch draw + train + aggregate
+    round_times: list = dataclasses.field(default_factory=list)  # raw per-round
+
+
+class _Setup:
+    """Shared (engine-independent) experiment state."""
+
+    def __init__(self, data: SyntheticClassification, sim: SimConfig):
+        self.rng = np.random.default_rng(sim.seed)
+        self.sim = sim
+        K = sim.num_clients
+        n_bad = int(round(sim.bad_frac * K))
+        self.bad = np.arange(n_bad)  # deterministic: first n_bad clients are bad
+        self.bad_mask = np.zeros(K, bool)
+        self.bad_mask[self.bad] = True
+
+        if sim.sharding == "dirichlet":
+            from repro.data import dirichlet_shards
+
+            shards = dirichlet_shards(
+                data.x_train, data.y_train, K, alpha=sim.dirichlet_alpha, seed=sim.seed
+            )
+        else:
+            shards = iid_shards(data.x_train, data.y_train, K, seed=sim.seed)
+        binary = data.num_classes == 2
+        # data-level poisoning
+        self.poisoned = []
+        for k, (x, y) in enumerate(shards):
+            if self.bad_mask[k] and sim.scenario == "flipping":
+                x, y = flip_labels(x, y)
+            elif self.bad_mask[k] and sim.scenario == "noisy":
+                x, y = noisy_features(x, y, self.rng, binary=binary)
+            self.poisoned.append((x, y))
+
+        out_units = 1 if binary else data.num_classes
+        self.sizes = (data.dim, *sim.hidden, out_units)
+        self.params0 = init_dnn(jax.random.PRNGKey(sim.seed), self.sizes)
+        self.n_k = np.asarray([len(x) for x, _ in self.poisoned], np.float32)
+        self.x_test = jnp.asarray(data.x_test)
+        self.y_test = jnp.asarray(data.y_test.astype(np.int32))
+        self.err_fn = jax.jit(dnn_error)
+
+        # uniform per-round minibatch geometry (both engines; stacking needs
+        # one (S, b) for every client).  Keyed to the MEAN shard so skewed
+        # (dirichlet) splits don't under-train large clients; sampling is with
+        # replacement, so b may exceed a small shard's length.  For equal
+        # shards this reduces to the per-client geometry.
+        lens = [len(x) for x, _ in self.poisoned]
+        self.batch_b = min(sim.batch_size, max(lens))
+        self.batch_s = sim.local_epochs * max(
+            int(np.mean(lens)) // sim.batch_size, 1
+        )
+
+    def trainers(self, selected) -> list:
+        """Selected clients that actually run local SGD this round, in
+        ascending order (update-level attackers send forged updates instead)."""
+        skip_bad = self.sim.scenario in UPDATE_ATTACK_SCENARIOS
+        return [int(k) for k in selected if not (skip_bad and self.bad_mask[k])]
+
+    def draw_indices(self, trainers: list) -> dict:
+        """Consume the shared numpy stream — identically in both engines."""
+        out = {}
+        for k in trainers:
+            x, _ = self.poisoned[k]
+            out[k] = self.rng.integers(0, len(x), size=(self.batch_s, self.batch_b))
+        return out
+
+    def engine_config(self) -> EngineConfig:
+        s = self.sim
+        return EngineConfig(
+            scenario=s.scenario, lr=s.lr, momentum=s.momentum, dropout=s.dropout,
+            byzantine_scale=s.byzantine_scale,
+        )
+
+    def result(self, server: FedServer, test_error, good_hist,
+               t_train, t_agg, round_times) -> SimResult:
+        sim, bad = self.sim, self.bad
+        blocked_round = getattr(server, "rounds_blocked", np.full(sim.num_clients, -1))
+        det = blocked_round[bad] > 0 if len(bad) else np.asarray([])
+        return SimResult(
+            test_error=test_error,
+            train_time=t_train / sim.rounds,
+            agg_time=t_agg / sim.rounds,
+            blocked_round=blocked_round,
+            bad_clients=bad,
+            good_mask_history=good_hist,
+            detection_rate=float(det.mean()) if len(bad) else float("nan"),
+            mean_rounds_to_block=(
+                float(blocked_round[bad][det].mean())
+                if len(bad) and det.any() else float("nan")
+            ),
+            round_time=float(np.mean(round_times)) if round_times else 0.0,
+            round_times=list(round_times),
+        )
 
 
 def run_simulation(
@@ -69,103 +178,129 @@ def run_simulation(
     *,
     eval_every: int = 1,
 ) -> SimResult:
-    rng = np.random.default_rng(sim.seed)
+    setup = _Setup(data, sim)
+    if sim.engine == "batched":
+        return _run_batched(setup, server_cfg, eval_every)
+    if sim.engine == "looped":
+        return _run_looped(setup, server_cfg, eval_every)
+    raise ValueError(f"unknown engine {sim.engine!r} (batched | looped)")
+
+
+# ---------------------------------------------------------------------------
+# batched engine — device-resident round (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def _run_batched(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> SimResult:
+    sim = setup.sim
     K = sim.num_clients
-    n_bad = int(round(sim.bad_frac * K))
-    bad = np.arange(n_bad)  # deterministic: first n_bad clients are bad
-
-    if sim.sharding == "dirichlet":
-        from repro.data import dirichlet_shards
-
-        shards = dirichlet_shards(
-            data.x_train, data.y_train, K, alpha=sim.dirichlet_alpha, seed=sim.seed
-        )
-    else:
-        shards = iid_shards(data.x_train, data.y_train, K, seed=sim.seed)
-    binary = data.num_classes == 2
-    # data-level poisoning
-    poisoned = []
-    for k, (x, y) in enumerate(shards):
-        if k in bad and sim.scenario == "flipping":
-            x, y = flip_labels(x, y)
-        elif k in bad and sim.scenario == "noisy":
-            x, y = noisy_features(x, y, rng, binary=binary)
-        poisoned.append((x, y))
-
-    out_units = 1 if binary else data.num_classes
-    sizes = (data.dim, *sim.hidden, out_units)
-    key = jax.random.PRNGKey(sim.seed)
-    params = init_dnn(key, sizes)
-    template = params
-    n_k = np.asarray([len(x) for x, _ in poisoned], np.float32)
-
     server = FedServer(server_cfg)
-    x_test = jnp.asarray(data.x_test)
-    y_test = jnp.asarray(data.y_test.astype(np.int32))
-    err_fn = jax.jit(dnn_error)
+    params = setup.params0
+    step = make_train_attack_step(dnn_loss, setup.engine_config())
+    dim = setup.poisoned[0][0].shape[1]
+    S, b = setup.batch_s, setup.batch_b
+    bad_j = jnp.asarray(setup.bad_mask)
 
-    def make_batches(k):
-        x, y = poisoned[k]
-        steps = sim.local_epochs * max(len(x) // sim.batch_size, 1)
-        idx = rng.integers(0, len(x), size=(steps, min(sim.batch_size, len(x))))
-        return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx].astype(np.int32))}
-
-    test_error, good_hist = [], []
+    test_error, good_hist, round_times = [], [], []
     t_train = t_agg = 0.0
     for rnd in range(sim.rounds):
+        t_start = time.perf_counter()
         selected = server.select()
+        trainers = setup.trainers(selected)
+        idx = setup.draw_indices(trainers)
+
+        xb = np.zeros((K, S, b, dim), np.float32)
+        yb = np.zeros((K, S, b), np.int32)
+        for k, ix in idx.items():
+            x, y = setup.poisoned[k]
+            xb[k] = x[ix]
+            yb[k] = y[ix].astype(np.int32)
+        batch = {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
+        train_mask = np.zeros(K, bool)
+        train_mask[trainers] = True
+        mask0 = server.participation_mask(selected)
+        benign = mask0 & ~setup.bad_mask
+
         t0 = time.perf_counter()
-        proposals = np.zeros((K, sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))), np.float32)
-        w_prev = np.asarray(flatten_to_matrix(jax.tree_util.tree_map(lambda l: l[None], params), 1))[0]
-        for k in selected:
-            if k in bad and sim.scenario in ("byzantine", "alie", "ipm"):
-                continue  # update-level attackers don't train
-            batches = make_batches(int(k))
-            wk = local_sgd(
-                dnn_loss, params, batches, jax.random.PRNGKey(rnd * 1000 + int(k)),
-                lr=sim.lr, momentum=sim.momentum, dropout=sim.dropout,
-            )
-            proposals[k] = np.asarray(
-                flatten_to_matrix(jax.tree_util.tree_map(lambda l: l[None], wk), 1)
-            )[0]
-        # update-level attacks
-        sel_bad = [k for k in selected if k in bad]
-        if sim.scenario == "byzantine":
-            for k in sel_bad:
-                proposals[k] = w_prev + rng.normal(
-                    scale=sim.byzantine_scale, size=w_prev.shape
-                ).astype(np.float32)
-        elif sim.scenario == "alie" and sel_bad:
-            benign = proposals[[k for k in selected if k not in bad]]
-            adv = alie_update_attack(benign, z_max=1.2)
-            for k in sel_bad:
-                proposals[k] = adv
-        elif sim.scenario == "ipm" and sel_bad:
-            benign = proposals[[k for k in selected if k not in bad]]
-            adv = ipm_update_attack(benign, eps=0.5)
-            for k in sel_bad:
-                proposals[k] = adv
+        proposals = step(
+            params, batch, client_keys(rnd, K),
+            jnp.asarray(train_mask), bad_j & jnp.asarray(mask0),
+            jnp.asarray(benign), attack_key(sim.seed, rnd),
+        )
+        jax.block_until_ready(proposals)
         t_train += time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        agg, info = server.aggregate(jnp.asarray(proposals), n_k, selected)
-        jax.block_until_ready(agg)
+        params, info = server.aggregate_tree(proposals, setup.n_k, selected)
+        jax.block_until_ready(params)
         t_agg += time.perf_counter() - t0
-        params = unflatten_from_vector(agg, template)
+        round_times.append(time.perf_counter() - t_start)
         good_hist.append(info.get("good_mask"))
 
         if rnd % eval_every == 0 or rnd == sim.rounds - 1:
-            test_error.append(float(err_fn(params, x_test, y_test)) * 100.0)
+            test_error.append(
+                float(setup.err_fn(params, setup.x_test, setup.y_test)) * 100.0
+            )
 
-    blocked_round = getattr(server, "rounds_blocked", np.full(K, -1))
-    det = blocked_round[bad] > 0 if n_bad else np.asarray([])
-    return SimResult(
-        test_error=test_error,
-        train_time=t_train / sim.rounds,
-        agg_time=t_agg / sim.rounds,
-        blocked_round=blocked_round,
-        bad_clients=bad,
-        good_mask_history=good_hist,
-        detection_rate=float(det.mean()) if n_bad else float("nan"),
-        mean_rounds_to_block=float(blocked_round[bad][det].mean()) if n_bad and det.any() else float("nan"),
-    )
+    return setup.result(server, test_error, good_hist, t_train, t_agg, round_times)
+
+
+# ---------------------------------------------------------------------------
+# looped engine — per-client dispatch reference
+# ---------------------------------------------------------------------------
+
+
+def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> SimResult:
+    sim = setup.sim
+    K = sim.num_clients
+    server = FedServer(server_cfg)
+    params = setup.params0
+    ec = setup.engine_config()
+    bad_j = jnp.asarray(setup.bad_mask)
+
+    test_error, good_hist, round_times = [], [], []
+    t_train = t_agg = 0.0
+    for rnd in range(sim.rounds):
+        t_start = time.perf_counter()
+        selected = server.select()
+        trainers = setup.trainers(selected)
+        idx = setup.draw_indices(trainers)
+        mask0 = server.participation_mask(selected)
+        benign = mask0 & ~setup.bad_mask
+
+        t0 = time.perf_counter()
+        per_client = [params] * K  # non-trainers hold w_t (masked out later)
+        for k in trainers:
+            x, y = setup.poisoned[k]
+            batches = {
+                "x": jnp.asarray(x[idx[k]]),
+                "y": jnp.asarray(y[idx[k]].astype(np.int32)),
+            }
+            per_client[k] = local_sgd(
+                dnn_loss, params, batches, jax.random.PRNGKey(rnd * 1000 + k),
+                lr=sim.lr, momentum=sim.momentum, dropout=sim.dropout,
+            )
+        stacked = tree_stack(per_client)
+        stacked = apply_update_attack(
+            sim.scenario, stacked, params, bad_j & jnp.asarray(mask0),
+            jnp.asarray(benign), attack_key(sim.seed, rnd),
+            byzantine_scale=ec.byzantine_scale, z_max=ec.alie_z_max, eps=ec.ipm_eps,
+        )
+        jax.block_until_ready(stacked)
+        t_train += time.perf_counter() - t0
+
+        # same registry tree dispatch as the batched engine, so the two
+        # engines differ only in the client layer (per-client jit vs vmap)
+        t0 = time.perf_counter()
+        params, info = server.aggregate_tree(stacked, setup.n_k, selected)
+        jax.block_until_ready(params)
+        t_agg += time.perf_counter() - t0
+        round_times.append(time.perf_counter() - t_start)
+        good_hist.append(info.get("good_mask"))
+
+        if rnd % eval_every == 0 or rnd == sim.rounds - 1:
+            test_error.append(
+                float(setup.err_fn(params, setup.x_test, setup.y_test)) * 100.0
+            )
+
+    return setup.result(server, test_error, good_hist, t_train, t_agg, round_times)

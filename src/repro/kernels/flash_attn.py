@@ -1,6 +1,6 @@
 """Pallas TPU flash attention (causal / full), batched-heads tile.
 
-The §Perf C conclusion (EXPERIMENTS.md): GSPMD's partitioning of the
+The Perf C conclusion (DESIGN.md §Perf): GSPMD's partitioning of the
 attention einsums inserts per-block partial-score psums that constraints
 cannot fully remove — the definitive fix is a kernel with explicit layouts.
 This kernel is that fix: per (batch·head, q-block) grid cell it streams KV

@@ -99,7 +99,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 
     GQA handled by broadcasting kv heads before flattening (B, H) -> BH for
     the Pallas kernel; explicit per-head layout, no GSPMD partial-score psums
-    (see EXPERIMENTS.md §Perf C)."""
+    (see DESIGN.md §Perf, Perf C)."""
     from repro.kernels.flash_attn import flash_attention_bh
 
     interpret = (not _on_tpu()) if interpret is None else interpret

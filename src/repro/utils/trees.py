@@ -62,6 +62,32 @@ def tree_axpy(s, x, y):
     )
 
 
+def tree_stack(trees):
+    """List of identically-structured trees -> one tree with a new leading
+    client axis on every leaf (host-side helper for the looped engine)."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def tree_broadcast_clients(tree, num_clients: int):
+    """Broadcast a single tree to a stacked tree with K identical rows."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (num_clients,) + l.shape), tree
+    )
+
+
+def tree_select_rows(mask, a, b):
+    """Row-wise select over the leading client axis: ``where(mask[k], a_k,
+    b_k)`` leafwise.  The jit-able replacement for Python per-client branching
+    (honest vs attacker, trained vs skipped)."""
+    return jax.tree_util.tree_map(
+        lambda la, lb: jnp.where(
+            mask.reshape((-1,) + (1,) * (la.ndim - 1)), la, lb
+        ),
+        a,
+        b,
+    )
+
+
 def tree_zeros_like(a, dtype=None):
     return jax.tree_util.tree_map(
         lambda x: jnp.zeros(x.shape, dtype or x.dtype), a

@@ -247,7 +247,7 @@ def test_checkpoint_roundtrip(tmp_path, tiny_lm):
 
 def test_fed_round_scan_int8_close_to_fp32(tiny_lm):
     """int8 delta-quantized proposal storage (the nemotron memory
-    optimization, EXPERIMENTS.md §Perf) matches fp32 within quant error."""
+    optimization, DESIGN.md §Perf) matches fp32 within quant error."""
     K = 4
     base = FedRoundConfig(num_clients=K, local_steps=2, lr=0.05)
     params = tiny_lm.init(jax.random.PRNGKey(9))

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import coord_median, cosine_sim, gram, weighted_sum, pairwise_sq_dists_from_gram

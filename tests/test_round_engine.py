@@ -1,0 +1,194 @@
+"""Round-engine tests: looped-vs-batched trajectory equivalence, registry
+dispatch coverage (every rule in RULES reachable from ServerConfig.rule, in
+both proposal layouts), and the stacked-pytree attack transforms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.attacks import (
+    alie_update_tree,
+    byzantine_update_tree,
+    ipm_update_tree,
+)
+from repro.core import RULES, RuleOptions, dispatch_rule_tree
+from repro.data import make_mnist_like
+from repro.fed import FedServer, ServerConfig, SimConfig, run_simulation
+
+RNG = np.random.default_rng(7)
+
+
+# ------------------- looped vs batched engine equivalence --------------------
+
+
+@pytest.fixture(scope="module")
+def eq_data():
+    return make_mnist_like(n_train=1000, n_test=300, dim=196)
+
+
+def _engine_run(data, scenario, engine, rule="afa", dropout=True):
+    sim = SimConfig(
+        num_clients=8, scenario=scenario, rounds=5, local_epochs=2,
+        batch_size=100, hidden=(64, 32), dropout=dropout, seed=3, engine=engine,
+    )
+    return run_simulation(data, sim, ServerConfig(rule=rule, num_clients=8))
+
+
+@pytest.mark.parametrize("scenario", ["clean", "byzantine"])
+def test_engines_equivalent(eq_data, scenario):
+    """Same seeds -> same per-round test error and good_mask history.  The
+    engines share batch sampling, attack keys, and the registry tree
+    dispatch, so only the client layer (per-client jit vs vmap) differs."""
+    looped = _engine_run(eq_data, scenario, "looped")
+    batched = _engine_run(eq_data, scenario, "batched")
+    np.testing.assert_allclose(
+        looped.test_error, batched.test_error, rtol=0, atol=1e-3
+    )
+    assert len(looped.good_mask_history) == len(batched.good_mask_history)
+    for gl, gb in zip(looped.good_mask_history, batched.good_mask_history):
+        np.testing.assert_array_equal(np.asarray(gl), np.asarray(gb))
+
+
+def test_engines_equivalent_under_update_attacks(eq_data):
+    """alie/ipm forge rows from benign statistics — both engines must compute
+    them from the same masked stacked-tree moments."""
+    for scenario in ["alie", "ipm"]:
+        looped = _engine_run(eq_data, scenario, "looped", dropout=False)
+        batched = _engine_run(eq_data, scenario, "batched", dropout=False)
+        np.testing.assert_allclose(
+            looped.test_error, batched.test_error, rtol=0, atol=1e-3
+        )
+
+
+def test_unknown_engine_rejected(eq_data):
+    with pytest.raises(ValueError, match="unknown engine"):
+        _engine_run(eq_data, "clean", "warp")
+
+
+# --------------------------- registry dispatch -------------------------------
+
+
+def _updates(K=10, d=48):
+    base = RNG.normal(size=(d,)).astype(np.float32)
+    U = base[None] + 0.05 * RNG.normal(size=(K, d)).astype(np.float32)
+    return jnp.asarray(U)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_every_rule_reachable_from_server_config(rule):
+    K = 10
+    U = _updates(K)
+    server = FedServer(ServerConfig(rule=rule, num_clients=K))
+    agg, info = server.aggregate(U, np.ones(K, np.float32), np.arange(K))
+    assert np.isfinite(np.asarray(agg)).all()
+    assert info["good_mask"].shape == (K,)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_every_rule_dispatches_tree_form(rule):
+    """Tree dispatch must serve every rule: native tree form (AFA) or the
+    in-jit flatten fallback — aggregate comes back with template structure."""
+    K = 8
+    stacked = {
+        "w": jnp.asarray(RNG.normal(size=(K, 6, 4)).astype(np.float32)),
+        "b": jnp.asarray(RNG.normal(size=(K, 4)).astype(np.float32)),
+    }
+    server = FedServer(ServerConfig(rule=rule, num_clients=K))
+    agg, info = server.aggregate_tree(stacked, np.ones(K, np.float32), np.arange(K))
+    assert agg["w"].shape == (6, 4) and agg["b"].shape == (4,)
+    assert np.isfinite(np.asarray(agg["w"])).all()
+    assert info["good_mask"].shape == (K,)
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_tree_and_matrix_dispatch_agree(rule):
+    """Flatten-fallback tree dispatch == matrix dispatch on the same rows."""
+    K, d = 8, 24
+    U = _updates(K, d)
+    stacked = {"w": U.reshape(K, 6, 4)}
+    n_k = jnp.ones((K,), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.ones((K,), bool)
+    opts = RuleOptions()
+    from repro.core import dispatch_rule
+
+    mat = dispatch_rule(rule, U, n_k, p_k, mask, opts)
+    tre = dispatch_rule_tree(rule, stacked, n_k, p_k, mask, opts)
+    np.testing.assert_allclose(
+        np.asarray(tre.aggregate["w"]).reshape(-1), np.asarray(mat.aggregate),
+        rtol=2e-5, atol=2e-6,
+    )
+    np.testing.assert_array_equal(np.asarray(tre.good_mask), np.asarray(mat.good_mask))
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(ValueError, match="unknown rule"):
+        FedServer(ServerConfig(rule="nope", num_clients=4)).aggregate(
+            _updates(4), np.ones(4, np.float32), np.arange(4)
+        )
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_use_kernels_flag_accepted_by_every_rule(rule):
+    """On non-TPU backends use_kernels falls back to the jnp reference, so
+    results must be identical with the flag on or off — for every rule."""
+    K = 10
+    U = _updates(K)
+    n = np.ones(K, np.float32)
+    a_ref, _ = FedServer(ServerConfig(rule=rule, num_clients=K)).aggregate(
+        U, n, np.arange(K)
+    )
+    a_krn, _ = FedServer(
+        ServerConfig(rule=rule, num_clients=K, use_kernels=True)
+    ).aggregate(U, n, np.arange(K))
+    np.testing.assert_allclose(
+        np.asarray(a_ref), np.asarray(a_krn), rtol=1e-6, atol=1e-7
+    )
+
+
+# ------------------------ stacked-pytree attacks -----------------------------
+
+
+def _stacked(K=6):
+    return {
+        "w": jnp.asarray(RNG.normal(size=(K, 5, 3)).astype(np.float32)),
+        "b": jnp.asarray(RNG.normal(size=(K, 3)).astype(np.float32)),
+    }
+
+
+def test_byzantine_tree_touches_only_bad_rows():
+    K = 6
+    props = _stacked(K)
+    w_prev = {"w": jnp.zeros((5, 3)), "b": jnp.zeros((3,))}
+    bad = jnp.asarray([True, True, False, False, False, False])
+    out = byzantine_update_tree(props, w_prev, bad, jax.random.PRNGKey(0), scale=20.0)
+    np.testing.assert_array_equal(np.asarray(out["w"][2:]), np.asarray(props["w"][2:]))
+    # bad rows are w_prev + N(0, 20^2): huge relative to the honest rows
+    assert float(jnp.abs(out["w"][:2]).mean()) > 5.0
+
+
+def test_alie_tree_matches_flat_reference():
+    K = 6
+    props = _stacked(K)
+    bad = jnp.asarray([True, False, False, False, False, False])
+    benign = ~bad
+    out = alie_update_tree(props, bad, benign, z_max=1.2)
+    flat = np.asarray(props["w"]).reshape(K, -1)
+    mu, sd = flat[1:].mean(0), flat[1:].std(0)
+    np.testing.assert_allclose(
+        np.asarray(out["w"][0]).reshape(-1), mu - 1.2 * sd, rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(out["b"][1:]), np.asarray(props["b"][1:]))
+
+
+def test_ipm_tree_matches_flat_reference():
+    K = 6
+    props = _stacked(K)
+    bad = jnp.asarray([True, True, False, False, False, False])
+    benign = ~bad
+    out = ipm_update_tree(props, bad, benign, eps=0.5)
+    flat = np.asarray(props["b"])
+    np.testing.assert_allclose(
+        np.asarray(out["b"][0]), -0.5 * flat[2:].mean(0), rtol=1e-5, atol=1e-6
+    )
