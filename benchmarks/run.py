@@ -13,7 +13,8 @@ import time
 from benchmarks.common import emit
 
 MODULES = ["table1_robustness", "table2_detection", "fig2_convergence",
-           "fig3_aggregation_time", "round_engine", "ablation_xi", "roofline"]
+           "fig3_aggregation_time", "round_engine", "fused_engine",
+           "ablation_xi", "roofline"]
 
 
 def main() -> int:

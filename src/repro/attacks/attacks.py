@@ -56,9 +56,12 @@ def byzantine_update_attack(w_prev_flat: np.ndarray, rng, scale: float = 20.0):
     )
 
 
-def alie_update_attack(benign_updates: np.ndarray, z_max: float = 1.0):
+def alie_update_attack(benign_updates: np.ndarray, z_max: float = 1.2):
     """Colluding stealth attack: all attackers send mean - z_max * std of the
-    *benign* updates (coordinate-wise), staying within the benign spread."""
+    *benign* updates (coordinate-wise), staying within the benign spread.
+
+    Default ``z_max`` matches ``alie_update_tree`` / ``EngineConfig`` (1.2),
+    so analysis-script numbers agree with engine runs."""
     mu = benign_updates.mean(axis=0)
     sd = benign_updates.std(axis=0)
     return mu - z_max * sd

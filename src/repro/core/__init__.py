@@ -27,6 +27,7 @@ from repro.core.reputation import (
     ReputationState,
     block_probability,
     init_reputation,
+    mark_blocked_round,
     min_rounds_to_block,
     p_good,
     update_reputation,
@@ -57,6 +58,7 @@ __all__ = [
     "ReputationState",
     "init_reputation",
     "update_reputation",
+    "mark_blocked_round",
     "p_good",
     "block_probability",
     "min_rounds_to_block",

@@ -165,16 +165,24 @@ def trimmed_mean_aggregate(
 ) -> AggResult:
     """Coordinate-wise mean after dropping ``trim`` extremes from both ends.
     (Sort-based; no Pallas kernel — ``use_kernels`` is accepted but the jnp
-    reference is the only implementation.)"""
+    reference is the only implementation.)
+
+    When the live count ``m <= 2 * trim`` the trim window is empty — the rule
+    degrades to the masked coordinate-wise mean instead of silently returning
+    a zero aggregate (which would reset the model mid-run once blocking
+    shrinks participation below the window)."""
     K, _ = updates.shape
     mask = jnp.ones((K,), bool) if mask is None else mask
-    u = jnp.where(mask[:, None], updates.astype(jnp.float32), jnp.inf)
-    srt = jnp.sort(u, axis=0)
+    u32 = updates.astype(jnp.float32)
+    srt = jnp.sort(jnp.where(mask[:, None], u32, jnp.inf), axis=0)
     m = jnp.sum(mask)
     i = jnp.arange(K)[:, None]
     live = (i >= trim) & (i < m - trim)
     cnt = jnp.maximum(jnp.sum(live), 1)
-    mean = jnp.sum(jnp.where(live, srt, 0.0), axis=0) / cnt
+    trimmed = jnp.sum(jnp.where(live, srt, 0.0), axis=0) / cnt
+    w = mask.astype(jnp.float32)[:, None]
+    masked_mean = jnp.sum(u32 * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+    mean = jnp.where(m > 2 * trim, trimmed, masked_mean)
     return AggResult(mean.astype(updates.dtype), mask)
 
 

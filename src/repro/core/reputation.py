@@ -63,6 +63,25 @@ def update_reputation(
     return ReputationState(alpha=alpha, beta=beta, blocked=blocked)
 
 
+def mark_blocked_round(
+    rounds_blocked: jnp.ndarray,
+    blocked_before: jnp.ndarray,
+    blocked_after: jnp.ndarray,
+    round_index: jnp.ndarray,
+) -> jnp.ndarray:
+    """Record *when* each client was blocked, 1-indexed.
+
+    ``round_index`` is the 0-based index of the round being absorbed; a client
+    blocked during the first round gets ``rounds_blocked = 1`` (Table 2 counts
+    rounds from 1).  Entries stay ``-1`` until their client is blocked and are
+    never overwritten afterwards, so the value is the round of *first*
+    blocking.  Pure jnp — usable both from host bookkeeping and inside the
+    fused ``lax.scan``.
+    """
+    newly = blocked_after & ~blocked_before & (rounds_blocked < 0)
+    return jnp.where(newly, jnp.int32(round_index) + 1, rounds_blocked)
+
+
 def min_rounds_to_block(alpha0: float = 3.0, beta0: float = 3.0, delta: float = 0.95) -> int:
     """Smallest n with I_{0.5}(alpha0, beta0 + n) > delta.
 

@@ -34,12 +34,3 @@ def masked_median(x, mask):
     hi = jnp.maximum(m // 2, 0)
     med = 0.5 * (xs[lo] + xs[hi])
     return jnp.where(m > 0, med, 0.0)
-
-
-def masked_quantile_bounds(x, mask, trim: int):
-    """(low, high) order statistics after trimming ``trim`` from both ends."""
-    m = jnp.sum(mask)
-    xs = jnp.sort(jnp.where(mask, x, jnp.inf))
-    lo = jnp.clip(trim, 0, jnp.maximum(m - 1, 0))
-    hi = jnp.clip(m - 1 - trim, 0, jnp.maximum(m - 1, 0))
-    return xs[lo], xs[hi]

@@ -5,7 +5,7 @@ from repro.data.synthetic import (
     make_spambase_like,
     make_token_stream,
 )
-from repro.data.sharding import dirichlet_shards, iid_shards
+from repro.data.sharding import dirichlet_shards, iid_shards, padded_stack
 
 __all__ = [
     "SyntheticClassification",
@@ -15,4 +15,5 @@ __all__ = [
     "make_token_stream",
     "iid_shards",
     "dirichlet_shards",
+    "padded_stack",
 ]

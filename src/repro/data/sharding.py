@@ -1,5 +1,7 @@
 """Client shard construction: IID (the paper splits training data equally
-across clients) and Dirichlet non-IID (standard fed-learning benchmark)."""
+across clients) and Dirichlet non-IID (standard fed-learning benchmark),
+plus the padded ``(K, n_max, ...)`` stacking the fused round engine samples
+minibatches from on device."""
 
 from __future__ import annotations
 
@@ -13,6 +15,29 @@ def iid_shards(x: np.ndarray, y: np.ndarray, num_clients: int, seed: int = 0):
     idx = rng.permutation(len(x))
     parts = np.array_split(idx, num_clients)
     return [(x[p], y[p]) for p in parts]
+
+
+def padded_stack(shards):
+    """Ragged client shards -> device-ready padded stacks.
+
+    Returns ``(x (K, n_max, d) float32, y (K, n_max) int32, lengths (K,)
+    int32)``.  Shard k occupies rows ``[0, lengths[k])``; the tail is
+    zero-padded.  The fused engine draws minibatch indices on device as
+    ``randint(0, lengths[k])`` per client, so padding rows are never sampled
+    — they only buy every client a common shape for ``vmap``/``scan``.
+    """
+    K = len(shards)
+    n_max = max(len(x) for x, _ in shards)
+    dim = shards[0][0].shape[1]
+    x_pad = np.zeros((K, n_max, dim), np.float32)
+    y_pad = np.zeros((K, n_max), np.int32)
+    lengths = np.zeros((K,), np.int32)
+    for k, (x, y) in enumerate(shards):
+        n = len(x)
+        x_pad[k, :n] = x
+        y_pad[k, :n] = y
+        lengths[k] = n
+    return x_pad, y_pad, lengths
 
 
 def dirichlet_shards(

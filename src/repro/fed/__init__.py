@@ -1,8 +1,32 @@
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_logits, dnn_loss, init_dnn
-from repro.fed.engine import EngineConfig, attack_key, client_keys, make_train_attack_step
-from repro.fed.server import FedServer, ServerConfig
-from repro.fed.simulator import SimConfig, SimResult, run_simulation
+from repro.fed.engine import (
+    EngineConfig,
+    FusedData,
+    FusedTrajectory,
+    attack_key,
+    client_keys,
+    client_keys_traced,
+    make_fused_sim,
+    make_train_attack_step,
+    sweep_fused_sim,
+)
+from repro.fed.server import (
+    FedServer,
+    ServerConfig,
+    ServerState,
+    init_server_state,
+    make_rule_options,
+    server_step,
+)
+from repro.fed.simulator import (
+    SimConfig,
+    SimResult,
+    SweepResult,
+    detection_stats,
+    run_simulation,
+    run_sweep,
+)
 
 __all__ = [
     "local_sgd",
@@ -11,12 +35,24 @@ __all__ = [
     "dnn_loss",
     "dnn_error",
     "EngineConfig",
+    "FusedData",
+    "FusedTrajectory",
     "attack_key",
     "client_keys",
+    "client_keys_traced",
+    "make_fused_sim",
     "make_train_attack_step",
+    "sweep_fused_sim",
     "FedServer",
     "ServerConfig",
+    "ServerState",
+    "init_server_state",
+    "make_rule_options",
+    "server_step",
     "SimConfig",
     "SimResult",
+    "SweepResult",
+    "detection_stats",
     "run_simulation",
+    "run_sweep",
 ]

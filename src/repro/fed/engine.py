@@ -1,9 +1,9 @@
-"""Device-resident round engine: vmapped client training over a stacked
-client axis (DESIGN.md §2).
+"""Device-resident round engines: vmapped client training over a stacked
+client axis, and the fused T-round ``lax.scan`` simulation (DESIGN.md §2).
 
 The looped simulator path dispatches one jit per client per round and
-round-trips every proposal through host numpy.  This engine replaces that
-with ONE jit call that:
+round-trips every proposal through host numpy.  The **batched** engine
+replaces that with ONE jit call per round that:
 
   1. **client layer** — vmaps ``local_sgd`` over stacked shards
      (leaves ``(K, S, b, ...)``) and per-client RNG keys, training all K
@@ -21,6 +21,15 @@ Aggregation then goes through the registry tree dispatch
 consumes the stacked pytree natively; matrix-form rules flatten *inside jit*
 (pure jnp reshapes).  The per-round host work is reduced to drawing minibatch
 indices and the K-scalar reputation update.
+
+The **fused** engine (``make_fused_sim``) removes even that: the entire
+T-round simulation is ONE jit — ``lax.scan`` over rounds with ``(params,
+ServerState)`` as carry, minibatch indices drawn *on device* with
+``jax.random`` from padded ``(K, n_max, ...)`` shard stacks, the pure
+``server_step`` (reputation + blocking) inlined into the scan body, and the
+per-round test error emitted as a scan output.  Host↔device syncs drop from
+O(T) to O(1), and a whole simulation becomes a vmappable value — ``run_sweep``
+maps it over a seed axis in a single device program.
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.attacks import apply_update_attack
+from repro.attacks import UPDATE_ATTACK_SCENARIOS, apply_update_attack
 from repro.fed.client import local_sgd
 from repro.utils.trees import tree_broadcast_clients, tree_select_rows
 
@@ -69,6 +78,35 @@ def attack_key(seed: int, rnd: int) -> jnp.ndarray:
     return jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
 
 
+def _train_and_attack(
+    loss_fn, cfg: EngineConfig, params, batch, keys, train_mask, bad_mask,
+    benign_mask, akey,
+):
+    """The shared proposal pipeline: vmapped local SGD over the stacked
+    client axis, non-trainer rows reset to ``w_t``, update-level attacks
+    applied by mask.  ONE implementation traced by both the batched per-round
+    step and the fused scan body, so the engines cannot drift apart."""
+    K = train_mask.shape[0]
+
+    def train_one(cbatch, ckey):
+        return local_sgd(
+            loss_fn, params, cbatch, ckey,
+            lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
+        )
+
+    proposals = jax.vmap(train_one)(batch, keys)
+    # non-trainers hold w_t until the attack layer overwrites their row
+    proposals = tree_select_rows(
+        train_mask, proposals, tree_broadcast_clients(params, K)
+    )
+    return apply_update_attack(
+        cfg.scenario, proposals, params, bad_mask, benign_mask, akey,
+        byzantine_scale=cfg.byzantine_scale,
+        z_max=cfg.alie_z_max,
+        eps=cfg.ipm_eps,
+    )
+
+
 @functools.lru_cache(maxsize=64)
 def make_train_attack_step(loss_fn, cfg: EngineConfig):
     """Build the jit'd proposal producer.
@@ -82,24 +120,174 @@ def make_train_attack_step(loss_fn, cfg: EngineConfig):
 
     @jax.jit
     def step(params, batch, keys, train_mask, bad_mask, benign_mask, akey):
-        K = train_mask.shape[0]
-
-        def train_one(cbatch, ckey):
-            return local_sgd(
-                loss_fn, params, cbatch, ckey,
-                lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
-            )
-
-        proposals = jax.vmap(train_one)(batch, keys)
-        # non-trainers hold w_t until the attack layer overwrites their row
-        proposals = tree_select_rows(
-            train_mask, proposals, tree_broadcast_clients(params, K)
-        )
-        return apply_update_attack(
-            cfg.scenario, proposals, params, bad_mask, benign_mask, akey,
-            byzantine_scale=cfg.byzantine_scale,
-            z_max=cfg.alie_z_max,
-            eps=cfg.ipm_eps,
+        return _train_and_attack(
+            loss_fn, cfg, params, batch, keys, train_mask, bad_mask,
+            benign_mask, akey,
         )
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# fused engine — the whole T-round simulation as ONE lax.scan jit
+# ---------------------------------------------------------------------------
+
+
+class FusedData(NamedTuple):
+    """Device-resident inputs of the fused simulation (all jnp arrays)."""
+
+    x: jnp.ndarray        # (K, n_max, d) zero-padded client shards
+    y: jnp.ndarray        # (K, n_max) int32 labels
+    lengths: jnp.ndarray  # (K,) int32 live rows per shard
+    n_k: jnp.ndarray      # (K,) float32 aggregation data weights
+    x_test: jnp.ndarray   # (n_test, d)
+    y_test: jnp.ndarray   # (n_test,) int32
+
+
+class FusedTrajectory(NamedTuple):
+    """Per-round scan outputs (leading axis T)."""
+
+    test_error: jnp.ndarray  # (T,) fraction in [0, 1]
+    good_mask: jnp.ndarray   # (T, K) bool — rule's kept-set each round
+    blocked: jnp.ndarray     # (T, K) bool — blocked set AFTER each round
+
+
+def client_keys_traced(rnd, num_clients: int) -> jnp.ndarray:
+    """In-jit twin of :func:`client_keys`: same ``PRNGKey(rnd * 1000 + k)``
+    threefry pairs, built from a (possibly traced) round scalar.  Valid while
+    ``rnd * 1000 + K`` fits in uint32 (rounds < ~4.29M)."""
+    seeds = (
+        jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(1000)
+        + jnp.arange(num_clients, dtype=jnp.uint32)
+    )
+    return jnp.stack([jnp.zeros_like(seeds), seeds], axis=1)
+
+
+# fold_in constant separating the device minibatch-index stream from the
+# attack-noise stream (which keeps the host engines' fold_in(key, rnd) form)
+_BATCH_STREAM = 0x0B47C4
+
+
+def make_fused_sim(
+    loss_fn,
+    err_fn,
+    cfg: EngineConfig,
+    *,
+    rule: str,
+    opts,                      # repro.core.RuleOptions (hashable)
+    delta_block: float,
+    num_clients: int,
+    num_rounds: int,
+    batch_s: int,
+    batch_b: int,
+    bad_mask: np.ndarray,
+    alpha0: float = 3.0,
+    beta0: float = 3.0,
+):
+    """Build the fused T-round simulation (DESIGN.md §2).
+
+    Returns ``(scan_fn, round_fn)``:
+
+    * ``scan_fn(params0, seed, data) -> (params_T, state_T, traj)`` — ONE
+      jit: ``lax.scan`` of the round body over ``T = num_rounds`` rounds,
+      carry ``(params, ServerState)``, with minibatch indices drawn on device
+      and the per-round (test error, good_mask, blocked) trajectory emitted
+      as scan outputs.  ``seed`` may be traced — ``run_sweep`` vmaps it.
+    * ``round_fn(carry, rnd, seed, data) -> (carry', out)`` — the identical
+      round body, jit'd standalone so it can run eagerly one round at a
+      time: the bit-equivalence reference for the scan
+      (``tests/test_fused_engine.py``).
+
+    Blocked clients keep their row in every fixed-shape computation (their
+    batches still gather, their ``local_sgd`` still runs) and are excluded
+    only by mask at the attack/aggregation stages — the known FLOPs-on-
+    zero-batches limitation of vmapped paths (DESIGN.md §2).
+
+    Cached on the full static signature so repeated simulations (benchmark
+    repeats, sweep construction) reuse the compiled scan.
+    """
+    return _make_fused_sim_cached(
+        loss_fn, err_fn, cfg, rule, opts, float(delta_block),
+        int(num_clients), int(num_rounds), int(batch_s), int(batch_b),
+        tuple(bool(b) for b in np.asarray(bad_mask)), float(alpha0), float(beta0),
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def _make_fused_sim_cached(
+    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    num_clients, num_rounds, batch_s, batch_b, bad_tuple, alpha0, beta0,
+):
+    from repro.fed.server import server_step
+
+    K = num_clients
+    bad = jnp.asarray(bad_tuple)
+    skip_bad = cfg.scenario in UPDATE_ATTACK_SCENARIOS
+
+    def round_fn(carry, rnd, seed, data: FusedData):
+        params, state = carry
+        mask0 = ~state.reputation.blocked
+        train_mask = mask0 & ~bad if skip_bad else mask0
+
+        # device-side minibatch draw: one key per round, per-client maxval
+        base = jax.random.PRNGKey(seed)
+        bkey = jax.random.fold_in(jax.random.fold_in(base, _BATCH_STREAM), rnd)
+        idx = jax.random.randint(
+            bkey, (K, batch_s, batch_b), 0, data.lengths[:, None, None]
+        )
+        batch = {
+            "x": jax.vmap(lambda xs, ix: xs[ix])(data.x, idx),
+            "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
+        }
+        proposals = _train_and_attack(
+            loss_fn, cfg, params, batch, client_keys_traced(rnd, K),
+            train_mask, bad & mask0, mask0 & ~bad,
+            jax.random.fold_in(base, rnd),
+        )
+
+        state, res = server_step(
+            state, proposals, data.n_k, mask0,
+            rule=rule, opts=opts, delta_block=delta_block, layout="tree",
+        )
+        err = err_fn(res.aggregate, data.x_test, data.y_test)
+        out = FusedTrajectory(err, res.good_mask, state.reputation.blocked)
+        return (res.aggregate, state), out
+
+    @jax.jit
+    def scan_fn(params0, seed, data: FusedData):
+        from repro.fed.server import init_server_state
+
+        state0 = init_server_state(K, alpha0, beta0)
+        (params, state), traj = jax.lax.scan(
+            lambda c, r: round_fn(c, r, seed, data),
+            (params0, state0),
+            jnp.arange(num_rounds, dtype=jnp.int32),
+        )
+        return params, state, traj
+
+    # the eager form is jit'd HERE, inside the cache, so repeated
+    # fused_eager simulations reuse its compile like the scan does
+    return scan_fn, jax.jit(round_fn)
+
+
+def sweep_fused_sim(scan_fn, sizes, seeds, data: FusedData):
+    """vmap the fused simulation over a seed axis: one device program runs
+    the whole seed grid (ROADMAP: adaptive-attack / prior-sensitivity sweeps).
+
+    Each seed drives the model init (``init_dnn(PRNGKey(seed))``), the device
+    minibatch stream, and the attack-noise stream.  The shard split itself is
+    host-side and fixed across the sweep — the sweep varies *stochasticity*,
+    not the partition.
+
+    Returns ``(params_T, state_T, traj)`` with a leading ``len(seeds)`` axis
+    on every leaf.
+    """
+    from repro.fed.dnn import init_dnn
+
+    seeds = jnp.asarray(np.asarray(seeds, np.uint32))
+
+    def one(seed):
+        params0 = init_dnn(jax.random.PRNGKey(seed), sizes)
+        return scan_fn(params0, seed, data)
+
+    return jax.vmap(one)(seeds)

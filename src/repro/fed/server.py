@@ -1,19 +1,31 @@
 """Server-side aggregation: registry-based rule dispatch + AFA
 reputation/blocking state.
 
-The server consumes the K client proposals either as a dense ``(K, d)``
-matrix (``aggregate``, the paper-scale looped path) or as a stacked pytree
-with a leading client axis (``aggregate_tree``, the device-resident round
-engine — see DESIGN.md §2/§3).  Both routes go through the single
-``dispatch_rule`` / ``dispatch_rule_tree`` interface in ``repro.core``; AFA
-is the paper's rule, the others are the comparison baselines.
+The server layer is a **pure functional core** wrapped by a thin stateful
+shell (DESIGN.md §2/§3):
+
+* ``ServerState`` — the complete server-side round state as a pytree:
+  Beta-Bernoulli reputation (which carries the blocked set), the 1-indexed
+  ``rounds_blocked`` bookkeeping, and the round counter.
+* ``server_step(state, proposals, n_k, mask0, ...) -> (state', result)`` —
+  ONE pure implementation of "aggregate + absorb the screening outcome".
+  Runs eagerly (host engines) or traced inside the fused ``lax.scan``
+  (``SimConfig.engine="fused"``), so both paths share one source of truth.
+* ``FedServer`` — the stateful wrapper the host engines drive; it owns a
+  ``ServerState`` and replaces it with ``server_step``'s output each round.
+
+Proposals arrive either as a dense ``(K, d)`` matrix (``aggregate``, the
+paper-scale looped path) or as a stacked pytree with a leading client axis
+(``aggregate_tree``, the device-resident round engines).  Both routes go
+through the single ``dispatch_rule`` / ``dispatch_rule_tree`` interface in
+``repro.core``; AFA is the paper's rule, the others are comparison baselines.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,18 +35,14 @@ from repro.core import (
     AFAConfig,
     RULES,
     RuleOptions,
+    ReputationState,
     dispatch_rule,
     dispatch_rule_tree,
     init_reputation,
+    mark_blocked_round,
     p_good,
     update_reputation,
 )
-
-
-@functools.partial(jax.jit, static_argnames=("delta",))
-def _update_reputation_jit(rep, good_mask, mask0, *, delta: float):
-    # module-level so the compiled update is shared across server instances
-    return update_reputation(rep, good_mask, mask0, delta=delta)
 
 
 @dataclasses.dataclass
@@ -65,21 +73,130 @@ class ServerConfig:
     use_kernels: bool = False
 
 
+# ---------------------------------------------------------------------------
+# pure functional core
+# ---------------------------------------------------------------------------
+
+
+class ServerState(NamedTuple):
+    """Complete server-side round state, as a pytree (scan-carriable)."""
+
+    reputation: ReputationState   # Beta posteriors + blocked set, (K,) leaves
+    rounds_blocked: jnp.ndarray   # (K,) int32 — 1-indexed round of first
+                                  # blocking, -1 = never blocked
+    round: jnp.ndarray            # scalar int32 — completed rounds
+
+
+def init_server_state(
+    num_clients: int, alpha0: float = 3.0, beta0: float = 3.0
+) -> ServerState:
+    return ServerState(
+        reputation=init_reputation(num_clients, alpha0, beta0),
+        rounds_blocked=jnp.full((num_clients,), -1, jnp.int32),
+        round=jnp.int32(0),
+    )
+
+
+def make_rule_options(cfg: ServerConfig, num_participants: int) -> RuleOptions:
+    """Host-side knob bundle for the registry (hashable -> jit-static).
+
+    ``num_selected`` is populated only for the rule that consumes it (MKRUM)
+    — it tracks the live participant count, and threading it into every
+    rule's options would retrace the jit'd dispatch each time a client gets
+    blocked.  (Only AFA blocks, so under MKRUM the participant count is
+    constant and the fused engine can compute it once before tracing.)
+    """
+    return RuleOptions(
+        num_byzantine=cfg.num_byzantine,
+        trim=cfg.trim,
+        num_selected=(
+            max(num_participants - cfg.num_byzantine - 2, 1)
+            if cfg.rule == "mkrum" else None
+        ),
+        use_kernels=cfg.use_kernels,
+        afa=AFAConfig(
+            xi0=cfg.xi0, delta_xi=cfg.delta_xi, variant=cfg.afa_variant,
+            use_kernels=cfg.use_kernels,
+        ),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("delta",))
+def _absorb(state: ServerState, good_mask, mask0, *, delta: float) -> ServerState:
+    """Fold one round's screening outcome into the Beta posteriors, the
+    blocked set, and the 1-indexed ``rounds_blocked`` bookkeeping.  Module-
+    level jit so the compiled update is shared across server instances; under
+    an outer trace (the fused scan) it simply inlines."""
+    rep = update_reputation(state.reputation, good_mask, mask0, delta=delta)
+    rounds_blocked = mark_blocked_round(
+        state.rounds_blocked, state.reputation.blocked, rep.blocked, state.round
+    )
+    return ServerState(rep, rounds_blocked, state.round + 1)
+
+
+def server_step(
+    state: ServerState,
+    proposals,
+    n_k: jnp.ndarray,
+    mask0: jnp.ndarray,
+    *,
+    rule: str,
+    opts: RuleOptions,
+    delta_block: float = 0.95,
+    layout: str = "tree",
+):
+    """One pure server round: dispatch the rule, then (for reputation-driven
+    rules) absorb the screening outcome.
+
+    Returns ``(state', result)`` where ``result`` is the rule's native output
+    (``.aggregate`` + ``.good_mask``; AFA adds ``rounds``/``similarities``).
+    ``proposals`` is a stacked pytree (``layout="tree"``) or a dense ``(K,
+    d)`` matrix (``layout="matrix"``).  Pure in ``state`` — callable eagerly
+    by :class:`FedServer` (where ``mask0`` is host-concrete, preserving e.g.
+    comed's kernel row-selection) or traced inside the fused ``lax.scan``.
+    """
+    dispatch = dispatch_rule_tree if layout == "tree" else dispatch_rule
+    res = dispatch(
+        rule, proposals, jnp.asarray(n_k, jnp.float32),
+        p_good(state.reputation), mask0, opts,
+    )
+    if RULES[rule].updates_reputation:
+        state = _absorb(state, res.good_mask, jnp.asarray(mask0), delta=delta_block)
+    else:
+        state = state._replace(round=state.round + 1)
+    return state, res
+
+
+# ---------------------------------------------------------------------------
+# stateful shell — host engines drive this
+# ---------------------------------------------------------------------------
+
+
 class FedServer:
-    """Holds the shared model state + AFA reputation; one ``aggregate`` (or
-    ``aggregate_tree``) per round.  The caller owns model (un)flattening."""
+    """Thin stateful wrapper over ``server_step``: holds a ``ServerState``
+    and swaps it for the step's output each round.  The caller owns model
+    (un)flattening."""
 
     def __init__(self, config: ServerConfig):
         self.cfg = config
-        self.reputation = init_reputation(config.num_clients, config.alpha0, config.beta0)
-        self.rounds_blocked = np.full(config.num_clients, -1, np.int64)
-        self._round = 0
+        self.state = init_server_state(
+            config.num_clients, config.alpha0, config.beta0
+        )
 
-    # -- selection ----------------------------------------------------------
+    # -- state views ---------------------------------------------------------
+    @property
+    def reputation(self) -> ReputationState:
+        return self.state.reputation
+
     @property
     def blocked(self) -> np.ndarray:
-        return np.asarray(self.reputation.blocked)
+        return np.asarray(self.state.reputation.blocked)
 
+    @property
+    def rounds_blocked(self) -> np.ndarray:
+        return np.asarray(self.state.rounds_blocked)
+
+    # -- selection ----------------------------------------------------------
     def select(self, rng: Optional[np.random.Generator] = None, frac: float = 1.0):
         """Per-round client selection among un-blocked clients."""
         avail = np.nonzero(~self.blocked)[0]
@@ -96,72 +213,32 @@ class FedServer:
         return mask0
 
     def rule_options(self, mask0: np.ndarray) -> RuleOptions:
-        """Host-side knob bundle for the registry (hashable -> jit-static).
+        return make_rule_options(self.cfg, int(mask0.sum()))
 
-        ``num_selected`` is populated only for the rule that consumes it
-        (MKRUM) — it tracks the live participant count, and threading it into
-        every rule's options would retrace the jit'd dispatch each time a
-        client gets blocked.
-        """
-        c = self.cfg
-        return RuleOptions(
-            num_byzantine=c.num_byzantine,
-            trim=c.trim,
-            num_selected=(
-                max(int(mask0.sum()) - c.num_byzantine - 2, 1)
-                if c.rule == "mkrum" else None
-            ),
-            use_kernels=c.use_kernels,
-            afa=AFAConfig(
-                xi0=c.xi0, delta_xi=c.delta_xi, variant=c.afa_variant,
-                use_kernels=c.use_kernels,
-            ),
+    def _apply(self, proposals, n_k, selected: np.ndarray, layout: str):
+        mask0 = self.participation_mask(selected)
+        self.state, res = server_step(
+            self.state, proposals, n_k, jnp.asarray(mask0),
+            rule=self.cfg.rule, opts=self.rule_options(mask0),
+            delta_block=self.cfg.delta_block, layout=layout,
         )
-
-    def absorb(self, good_mask, mask0) -> None:
-        """Fold one round's AFA screening outcome into the Beta posteriors and
-        the blocked set (host state).  The round engine calls this directly
-        with masks computed inside its jit step."""
-        self.reputation = _update_reputation_jit(
-            self.reputation, jnp.asarray(good_mask), jnp.asarray(mask0),
-            delta=self.cfg.delta_block,
-        )
-        newly_blocked = self.blocked & (self.rounds_blocked < 0)
-        self.rounds_blocked[newly_blocked] = self._round + 1
-
-    def _finish(self, res, mask0: np.ndarray):
-        """Shared post-dispatch bookkeeping for both proposal layouts."""
         info = {"good_mask": np.asarray(res.good_mask)}
         if RULES[self.cfg.rule].updates_reputation:
-            self.absorb(res.good_mask, jnp.asarray(mask0))
             info.update(
                 rounds=int(res.rounds),
                 similarities=np.asarray(res.similarities),
                 blocked=self.blocked.copy(),
-                p_good=np.asarray(p_good(self.reputation)),
+                p_good=np.asarray(p_good(self.state.reputation)),
             )
-        self._round += 1
         return res.aggregate, info
 
     # -- aggregation ---------------------------------------------------------
     def aggregate(self, updates: jnp.ndarray, n_k: jnp.ndarray, selected: np.ndarray):
         """updates: (K, d) with rows outside ``selected`` ignored.
         Returns (aggregate vector, info dict)."""
-        mask0 = self.participation_mask(selected)
-        res = dispatch_rule(
-            self.cfg.rule, updates, jnp.asarray(n_k, jnp.float32),
-            p_good(self.reputation), jnp.asarray(mask0),
-            self.rule_options(mask0),
-        )
-        return self._finish(res, mask0)
+        return self._apply(updates, n_k, selected, "matrix")
 
     def aggregate_tree(self, stacked, n_k: jnp.ndarray, selected: np.ndarray):
         """Stacked-pytree layout: every leaf carries a leading client axis.
         Returns (aggregate pytree, info dict)."""
-        mask0 = self.participation_mask(selected)
-        res = dispatch_rule_tree(
-            self.cfg.rule, stacked, jnp.asarray(n_k, jnp.float32),
-            p_good(self.reputation), jnp.asarray(mask0),
-            self.rule_options(mask0),
-        )
-        return self._finish(res, mask0)
+        return self._apply(stacked, n_k, selected, "tree")

@@ -2,21 +2,35 @@
 dataset, with clean / byzantine / flipping / noisy / alie / ipm scenarios —
 reproduces the paper's Tables 1-2 and the convergence figures.
 
-Two round engines (DESIGN.md §2), selected by ``SimConfig.engine``:
+Four round engines (DESIGN.md §2), selected by ``SimConfig.engine``:
 
-  * ``batched`` (default) — the device-resident pipeline: one jit call vmaps
-    ``local_sgd`` over a stacked client axis, applies the update-level attacks
-    as stacked-pytree transforms on device, and aggregates through the
-    registry tree dispatch.  Proposals never round-trip through host numpy.
+  * ``batched`` (default) — the device-resident round: one jit call per round
+    vmaps ``local_sgd`` over a stacked client axis, applies the update-level
+    attacks as stacked-pytree transforms on device, and aggregates through
+    the registry tree dispatch.  Proposals never round-trip through host
+    numpy, but the loop over rounds (and the minibatch draws) stay on host.
   * ``looped`` — the reference path: one jit dispatch per client per round.
     Aggregation goes through the same registry tree dispatch, so the engines
     differ only in the client layer.  Kept for equivalence testing and as the
     baseline of ``benchmarks/round_engine.py``.
+  * ``fused`` — the whole T-round simulation as ONE jit: ``lax.scan`` over
+    rounds with ``(params, ServerState)`` as carry, minibatch indices drawn
+    on device with ``jax.random`` from padded ``(K, n_max, ...)`` shard
+    stacks, and the per-round trajectory emitted as scan outputs.  O(1)
+    host↔device syncs per simulation instead of O(T); ``run_sweep`` vmaps it
+    over a seed axis.
+  * ``fused_eager`` — the fused round body run eagerly one round at a time:
+    the bit-equivalence reference for the fused scan
+    (``tests/test_fused_engine.py``).
 
-Both engines draw minibatch indices from the same host numpy stream and key
-the attack noise identically, so on fixed seeds they produce matching
-per-round trajectories (test error, ``good_mask`` history); see
-``tests/test_round_engine.py``.
+``batched`` and ``looped`` draw minibatch indices from the same host numpy
+stream and key the attack noise identically, so on fixed seeds they produce
+matching per-round trajectories (test error, ``good_mask`` history); see
+``tests/test_round_engine.py``.  The fused engines share the attack-key and
+client-key schemes but draw minibatch indices from a ``jax.random`` stream
+(there is no host RNG inside a scan), so fused trajectories are equivalent in
+distribution — not bitwise — to the host engines'; the batched engine stays
+the reference implementation of the round itself.
 
 Byzantine clients skip training entirely and send w_t + N(0, 20^2 I) (the
 paper's update-level fault); flipping/noisy clients poison their *shard* and
@@ -38,11 +52,25 @@ from repro.attacks import (
     flip_labels,
     noisy_features,
 )
-from repro.data import SyntheticClassification, iid_shards
+from repro.data import SyntheticClassification, iid_shards, padded_stack
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
-from repro.fed.engine import EngineConfig, attack_key, client_keys, make_train_attack_step
-from repro.fed.server import FedServer, ServerConfig
+from repro.fed.engine import (
+    EngineConfig,
+    FusedData,
+    FusedTrajectory,
+    attack_key,
+    client_keys,
+    make_fused_sim,
+    make_train_attack_step,
+    sweep_fused_sim,
+)
+from repro.fed.server import (
+    FedServer,
+    ServerConfig,
+    init_server_state,
+    make_rule_options,
+)
 from repro.utils.trees import tree_stack
 
 
@@ -62,7 +90,7 @@ class SimConfig:
     hidden: tuple = (512, 256)
     sharding: str = "iid"        # iid | dirichlet (non-IID label skew)
     dirichlet_alpha: float = 0.5
-    engine: str = "batched"      # batched | looped (reference)
+    engine: str = "batched"      # batched | looped | fused | fused_eager
 
 
 @dataclasses.dataclass
@@ -149,11 +177,10 @@ class _Setup:
             byzantine_scale=s.byzantine_scale,
         )
 
-    def result(self, server: FedServer, test_error, good_hist,
+    def result(self, blocked_round: np.ndarray, test_error, good_hist,
                t_train, t_agg, round_times) -> SimResult:
         sim, bad = self.sim, self.bad
-        blocked_round = getattr(server, "rounds_blocked", np.full(sim.num_clients, -1))
-        det = blocked_round[bad] > 0 if len(bad) else np.asarray([])
+        rate, mean_rounds = detection_stats(blocked_round, bad)
         return SimResult(
             test_error=test_error,
             train_time=t_train / sim.rounds,
@@ -161,14 +188,29 @@ class _Setup:
             blocked_round=blocked_round,
             bad_clients=bad,
             good_mask_history=good_hist,
-            detection_rate=float(det.mean()) if len(bad) else float("nan"),
-            mean_rounds_to_block=(
-                float(blocked_round[bad][det].mean())
-                if len(bad) and det.any() else float("nan")
-            ),
+            detection_rate=rate,
+            mean_rounds_to_block=mean_rounds,
             round_time=float(np.mean(round_times)) if round_times else 0.0,
             round_times=list(round_times),
         )
+
+
+def detection_stats(blocked_round: np.ndarray, bad: np.ndarray):
+    """(detection rate, mean rounds-to-block) over the bad-client set.
+
+    ``blocked_round`` is 1-indexed (a client blocked during the first round
+    carries 1, so round-1 blocks count as detected; -1 = never blocked).
+    Both stats are NaN when there are no bad clients; the mean is NaN when
+    none were blocked.
+    """
+    blocked_round = np.asarray(blocked_round)
+    bad = np.asarray(bad, dtype=np.int64)
+    if len(bad) == 0:
+        return float("nan"), float("nan")
+    det = blocked_round[bad] > 0
+    rate = float(det.mean())
+    mean_rounds = float(blocked_round[bad][det].mean()) if det.any() else float("nan")
+    return rate, mean_rounds
 
 
 def run_simulation(
@@ -183,7 +225,13 @@ def run_simulation(
         return _run_batched(setup, server_cfg, eval_every)
     if sim.engine == "looped":
         return _run_looped(setup, server_cfg, eval_every)
-    raise ValueError(f"unknown engine {sim.engine!r} (batched | looped)")
+    if sim.engine == "fused":
+        return _run_fused(setup, server_cfg, eval_every)
+    if sim.engine == "fused_eager":
+        return _run_fused(setup, server_cfg, eval_every, eager=True)
+    raise ValueError(
+        f"unknown engine {sim.engine!r} (batched | looped | fused | fused_eager)"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -234,15 +282,20 @@ def _run_batched(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Si
         params, info = server.aggregate_tree(proposals, setup.n_k, selected)
         jax.block_until_ready(params)
         t_agg += time.perf_counter() - t0
-        round_times.append(time.perf_counter() - t_start)
         good_hist.append(info.get("good_mask"))
 
         if rnd % eval_every == 0 or rnd == sim.rounds - 1:
             test_error.append(
                 float(setup.err_fn(params, setup.x_test, setup.y_test)) * 100.0
             )
+        # includes the eval dispatch, symmetric with the fused scan (which
+        # evaluates every round in-scan) so engine benchmarks compare like
+        # for like at eval_every=1
+        round_times.append(time.perf_counter() - t_start)
 
-    return setup.result(server, test_error, good_hist, t_train, t_agg, round_times)
+    return setup.result(
+        server.rounds_blocked, test_error, good_hist, t_train, t_agg, round_times
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -295,12 +348,137 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
         params, info = server.aggregate_tree(stacked, setup.n_k, selected)
         jax.block_until_ready(params)
         t_agg += time.perf_counter() - t0
-        round_times.append(time.perf_counter() - t_start)
         good_hist.append(info.get("good_mask"))
 
         if rnd % eval_every == 0 or rnd == sim.rounds - 1:
             test_error.append(
                 float(setup.err_fn(params, setup.x_test, setup.y_test)) * 100.0
             )
+        round_times.append(time.perf_counter() - t_start)
 
-    return setup.result(server, test_error, good_hist, t_train, t_agg, round_times)
+    return setup.result(
+        server.rounds_blocked, test_error, good_hist, t_train, t_agg, round_times
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused engine — the whole simulation as one lax.scan jit (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def _fused_data(setup: _Setup) -> FusedData:
+    x_pad, y_pad, lengths = padded_stack(setup.poisoned)
+    return FusedData(
+        x=jnp.asarray(x_pad),
+        y=jnp.asarray(y_pad),
+        lengths=jnp.asarray(lengths),
+        n_k=jnp.asarray(setup.n_k),
+        x_test=setup.x_test,
+        y_test=setup.y_test,
+    )
+
+
+def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig):
+    """Fused scan + round body for this experiment's static configuration."""
+    sim = setup.sim
+    return make_fused_sim(
+        dnn_loss, dnn_error, setup.engine_config(),
+        rule=server_cfg.rule,
+        opts=make_rule_options(server_cfg, sim.num_clients),
+        delta_block=server_cfg.delta_block,
+        num_clients=sim.num_clients,
+        num_rounds=sim.rounds,
+        batch_s=setup.batch_s,
+        batch_b=setup.batch_b,
+        bad_mask=setup.bad_mask,
+        alpha0=server_cfg.alpha0,
+        beta0=server_cfg.beta0,
+    )
+
+
+def _run_fused(
+    setup: _Setup, server_cfg: ServerConfig, eval_every: int, *, eager: bool = False
+) -> SimResult:
+    sim = setup.sim
+    data = _fused_data(setup)
+    scan_fn, round_fn = _make_setup_sim(setup, server_cfg)
+
+    t_start = time.perf_counter()
+    if eager:
+        # bit-equivalence reference: the identical round body, one jit
+        # dispatch per round instead of one scan over all of them
+        step = round_fn
+        carry = (
+            setup.params0,
+            init_server_state(sim.num_clients, server_cfg.alpha0, server_cfg.beta0),
+        )
+        outs = []
+        for rnd in range(sim.rounds):
+            carry, out = step(carry, jnp.int32(rnd), jnp.uint32(sim.seed), data)
+            outs.append(out)
+        state = carry[1]
+        traj = FusedTrajectory(*[jnp.stack(ls) for ls in zip(*outs)])
+    else:
+        _, state, traj = scan_fn(setup.params0, jnp.uint32(sim.seed), data)
+    jax.block_until_ready(traj)
+    total = time.perf_counter() - t_start
+
+    errs = np.asarray(traj.test_error, np.float64) * 100.0
+    test_error = [
+        float(errs[r]) for r in range(sim.rounds)
+        if r % eval_every == 0 or r == sim.rounds - 1
+    ]
+    good_hist = [gm for gm in np.asarray(traj.good_mask)]
+    per_round = total / max(sim.rounds, 1)
+    # one device program covers all T rounds: per-phase host timings do not
+    # exist, so only round_time is populated (uniformly spread)
+    return setup.result(
+        np.asarray(state.rounds_blocked), test_error, good_hist,
+        0.0, 0.0, [per_round] * sim.rounds,
+    )
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-seed trajectories/detection stats of a vmapped fused sweep."""
+
+    seeds: np.ndarray                # (n,)
+    test_error: np.ndarray           # (n, T) percent, every round
+    good_mask_history: np.ndarray    # (n, T, K) bool
+    blocked_round: np.ndarray        # (n, K) 1-indexed, -1 = never
+    bad_clients: np.ndarray          # (n_bad,) indices (fixed across seeds)
+    detection_rate: np.ndarray       # (n,)
+    mean_rounds_to_block: np.ndarray # (n,)
+
+
+def run_sweep(
+    data: SyntheticClassification,
+    sim: SimConfig,
+    server_cfg: ServerConfig,
+    seeds,
+) -> SweepResult:
+    """Run the fused simulation for every seed as ONE vmapped device program.
+
+    The shard split (and data-level poisoning) is built once from
+    ``sim.seed`` and shared across the sweep; each sweep seed drives the
+    model init, the device minibatch stream, and the attack-noise stream.
+    Replaces the Python-loop-over-seeds grid with a single jit dispatch —
+    the entry point for adaptive-attack and prior-sensitivity sweeps.
+    """
+    setup = _Setup(data, sim)
+    fdata = _fused_data(setup)
+    scan_fn, _ = _make_setup_sim(setup, server_cfg)
+    _, state, traj = sweep_fused_sim(scan_fn, setup.sizes, seeds, fdata)
+    jax.block_until_ready(traj)
+
+    blocked_round = np.asarray(state.rounds_blocked)
+    stats = [detection_stats(br, setup.bad) for br in blocked_round]
+    return SweepResult(
+        seeds=np.asarray(seeds),
+        test_error=np.asarray(traj.test_error, np.float64) * 100.0,
+        good_mask_history=np.asarray(traj.good_mask),
+        blocked_round=blocked_round,
+        bad_clients=setup.bad,
+        detection_rate=np.asarray([r for r, _ in stats]),
+        mean_rounds_to_block=np.asarray([m for _, m in stats]),
+    )

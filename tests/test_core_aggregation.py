@@ -141,6 +141,37 @@ def test_trimmed_mean_matches_numpy():
     np.testing.assert_allclose(out.aggregate, ref, rtol=1e-5)
 
 
+def test_trimmed_mean_empty_window_falls_back_to_masked_mean():
+    """Regression: live count m <= 2*trim used to return a silent zero
+    aggregate (empty trim window, cnt clamped to 1) — resetting the model
+    mid-run once blocking shrank participation.  It must degrade to the
+    masked coordinate-wise mean instead."""
+    U = make_updates(K=10, n_bad=0)
+    mask = np.zeros(10, bool)
+    mask[[1, 4, 6, 8]] = True  # m = 4 live, trim = 3 -> window [3, 1) empty
+    out = trimmed_mean_aggregate(U, mask=jnp.asarray(mask), trim=3)
+    ref = np.asarray(U)[mask].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out.aggregate), ref, rtol=1e-5)
+    assert float(np.abs(np.asarray(out.aggregate)).max()) > 0.0
+
+
+def test_trimmed_mean_boundary_window():
+    """m == 2*trim + 1 keeps exactly one row per coordinate (the masked
+    median); m == 2*trim is the first degenerate count."""
+    U = make_updates(K=9, n_bad=0)
+    mask = np.zeros(9, bool)
+    mask[:7] = True  # m = 7, trim = 3 -> single live row = median
+    out = trimmed_mean_aggregate(U, mask=jnp.asarray(mask), trim=3)
+    ref = np.median(np.asarray(U)[:7], axis=0)
+    np.testing.assert_allclose(np.asarray(out.aggregate), ref, rtol=1e-5)
+    mask[:] = False
+    mask[:6] = True  # m = 6 = 2*trim -> masked-mean fallback
+    out = trimmed_mean_aggregate(U, mask=jnp.asarray(mask), trim=3)
+    np.testing.assert_allclose(
+        np.asarray(out.aggregate), np.asarray(U)[:6].mean(axis=0), rtol=1e-5
+    )
+
+
 def test_mkrum_excludes_byzantine():
     U = make_updates(K=10, n_bad=3, kind="byzantine")
     out = mkrum_aggregate(U, num_byzantine=3, num_selected=5)

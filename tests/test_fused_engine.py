@@ -1,0 +1,135 @@
+"""Fused-engine tests: scan-vs-eager bit-equivalence, rule coverage through
+the pure server core, the vmapped seed sweep, and the padded shard stacking
+the device-side batch draw depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_mnist_like, padded_stack
+from repro.fed import (
+    ServerConfig,
+    SimConfig,
+    client_keys,
+    client_keys_traced,
+    run_simulation,
+    run_sweep,
+)
+
+
+@pytest.fixture(scope="module")
+def eq_data():
+    return make_mnist_like(n_train=1000, n_test=300, dim=196)
+
+
+def _sim(scenario, engine, rounds=5, seed=3):
+    return SimConfig(
+        num_clients=8, scenario=scenario, rounds=rounds, local_epochs=2,
+        batch_size=100, hidden=(64, 32), dropout=True, seed=seed, engine=engine,
+    )
+
+
+def _run(data, scenario, engine, rule="afa", rounds=5):
+    return run_simulation(
+        data, _sim(scenario, engine, rounds), ServerConfig(rule=rule, num_clients=8)
+    )
+
+
+# --------------------- scan vs eager bit-equivalence -------------------------
+
+
+@pytest.mark.parametrize("scenario", ["clean", "byzantine"])
+def test_fused_scan_bit_equivalent_to_eager_rounds(eq_data, scenario):
+    """The fused lax.scan and the identical round body dispatched eagerly one
+    round at a time must produce the SAME per-round (test error, good_mask)
+    trajectory — the scan adds no numerics of its own."""
+    fused = _run(eq_data, scenario, "fused")
+    eager = _run(eq_data, scenario, "fused_eager")
+    np.testing.assert_array_equal(
+        np.asarray(fused.test_error), np.asarray(eager.test_error)
+    )
+    assert len(fused.good_mask_history) == len(eager.good_mask_history)
+    for gf, ge in zip(fused.good_mask_history, eager.good_mask_history):
+        np.testing.assert_array_equal(np.asarray(gf), np.asarray(ge))
+    np.testing.assert_array_equal(fused.blocked_round, eager.blocked_round)
+
+
+def test_fused_engine_trains(eq_data):
+    """Error decreases over rounds; trajectory is finite throughout."""
+    res = _run(eq_data, "clean", "fused", rounds=6)
+    assert np.isfinite(res.test_error).all()
+    assert res.test_error[-1] < res.test_error[0]
+
+
+@pytest.mark.parametrize("rule", ["afa", "fa", "mkrum", "comed", "trimmed_mean"])
+def test_fused_engine_serves_registry_rules(eq_data, rule):
+    """The pure server core dispatches every rule family inside the scan:
+    native tree form (AFA) and the in-jit flatten fallback alike."""
+    res = _run(eq_data, "clean", "fused", rule=rule, rounds=3)
+    assert np.isfinite(res.test_error).all()
+    assert len(res.good_mask_history) == 3
+    assert res.good_mask_history[0].shape == (8,)
+
+
+def test_fused_matches_batched_phenomenology(eq_data):
+    """Fused and batched draw different minibatch streams (device vs host
+    RNG), so trajectories differ bitwise — but on the same workload both
+    must land in the same regime."""
+    fused = _run(eq_data, "clean", "fused", rounds=6)
+    batched = _run(eq_data, "clean", "batched", rounds=6)
+    assert abs(fused.test_error[-1] - batched.test_error[-1]) < 15.0
+
+
+# ------------------------------ seed sweep -----------------------------------
+
+
+def test_run_sweep_vmaps_over_seeds(eq_data):
+    sim = _sim("byzantine", "fused")
+    sw = run_sweep(eq_data, sim, ServerConfig(rule="afa", num_clients=8), [3, 4, 5])
+    assert sw.test_error.shape == (3, sim.rounds)
+    assert sw.good_mask_history.shape == (3, sim.rounds, 8)
+    assert sw.blocked_round.shape == (3, 8)
+    assert sw.detection_rate.shape == (3,)
+    assert np.isfinite(sw.test_error).all()
+    # seeds differ -> trajectories differ (different init + batch streams)
+    assert not np.array_equal(sw.test_error[0], sw.test_error[1])
+
+
+def test_run_sweep_row_matches_single_fused_run(eq_data):
+    """Sweep row for seed s == the single fused simulation with sim.seed=s
+    (same shard split base seed, same init, same device RNG streams)."""
+    sim = _sim("byzantine", "fused", seed=3)
+    sw = run_sweep(eq_data, sim, ServerConfig(rule="afa", num_clients=8), [3])
+    single = run_simulation(eq_data, sim, ServerConfig(rule="afa", num_clients=8))
+    np.testing.assert_allclose(
+        sw.test_error[0], np.asarray(single.test_error), rtol=0, atol=1e-4
+    )
+    np.testing.assert_array_equal(sw.blocked_round[0], single.blocked_round)
+
+
+# --------------------------- padded stacking ---------------------------------
+
+
+def test_padded_stack_geometry_and_content():
+    rng = np.random.default_rng(0)
+    shards = [
+        (rng.normal(size=(n, 4)).astype(np.float32), rng.integers(0, 3, n))
+        for n in (5, 3, 7)
+    ]
+    x, y, lengths = padded_stack(shards)
+    assert x.shape == (3, 7, 4) and y.shape == (3, 7)
+    np.testing.assert_array_equal(lengths, [5, 3, 7])
+    for k, (xs, ys) in enumerate(shards):
+        np.testing.assert_array_equal(x[k, : len(xs)], xs)
+        np.testing.assert_array_equal(y[k, : len(ys)], ys)
+        assert (x[k, len(xs):] == 0).all()  # pad rows zeroed, never sampled
+
+
+def test_client_keys_traced_matches_host_version():
+    """The in-jit key builder must reproduce the host engines' PRNGKey
+    scheme exactly, so all engines draw identical dropout masks."""
+    for rnd in (0, 1, 17):
+        np.testing.assert_array_equal(
+            np.asarray(client_keys_traced(jnp.int32(rnd), 6)),
+            np.asarray(client_keys(rnd, 6)),
+        )

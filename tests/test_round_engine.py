@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.attacks import (
+    alie_update_attack,
     alie_update_tree,
     byzantine_update_tree,
     ipm_update_tree,
@@ -180,6 +181,31 @@ def test_alie_tree_matches_flat_reference():
         np.asarray(out["w"][0]).reshape(-1), mu - 1.2 * sd, rtol=1e-4, atol=1e-5
     )
     np.testing.assert_array_equal(np.asarray(out["b"][1:]), np.asarray(props["b"][1:]))
+
+
+def test_alie_legacy_default_agrees_with_tree_default():
+    """Regression: the legacy flat helper defaulted to z_max=1.0 while the
+    tree transform / EngineConfig use 1.2, so analysis-script numbers
+    silently disagreed with engine runs.  At *defaults* both forms must
+    produce the same adversarial row."""
+    import inspect
+
+    from repro.fed import EngineConfig
+
+    assert (
+        inspect.signature(alie_update_attack).parameters["z_max"].default
+        == inspect.signature(alie_update_tree).parameters["z_max"].default
+        == EngineConfig().alie_z_max
+    )
+    K = 6
+    props = _stacked(K)
+    bad = jnp.asarray([True, False, False, False, False, False])
+    tree_out = alie_update_tree(props, bad, ~bad)  # defaults
+    flat = np.asarray(props["w"]).reshape(K, -1)
+    legacy_row = alie_update_attack(flat[1:])      # defaults
+    np.testing.assert_allclose(
+        np.asarray(tree_out["w"][0]).reshape(-1), legacy_row, rtol=1e-4, atol=1e-5
+    )
 
 
 def test_ipm_tree_matches_flat_reference():
