@@ -108,16 +108,33 @@ def _masked_moments(leaf, benign, cnt):
     return mu, var
 
 
-def byzantine_update_tree(proposals, w_prev, bad_mask, key, *, scale: float = 20.0):
-    """Bad rows <- w_t + N(0, scale^2 I); noise keyed per leaf so both engines
-    draw identical perturbations for a given (round, seed) key."""
+def byzantine_update_tree(
+    proposals, w_prev, bad_mask, key, *, scale: float = 20.0, client_ids=None
+):
+    """Bad rows <- w_t + N(0, scale^2 I).
+
+    Noise is keyed per (leaf, client): ``fold_in(fold_in(key, leaf_index),
+    client_id)``.  Because each client's perturbation depends only on its
+    *original* id — never on its row position or the stacked shape — the
+    segmented fused engine can compact blocked clients out of the stack and
+    still draw bit-identical noise for the survivors (``client_ids`` carries
+    the original ids through the compaction's index map; ``None`` means the
+    identity layout ``0..K-1``, the host engines' case)."""
     leaves, treedef = jax.tree_util.tree_flatten(proposals)
     prev = jax.tree_util.tree_leaves(w_prev)
+    K = leaves[0].shape[0]
+    ids = (
+        jnp.arange(K, dtype=jnp.uint32)
+        if client_ids is None
+        else jnp.asarray(client_ids, jnp.uint32)
+    )
     out = []
     for i, (l, p) in enumerate(zip(leaves, prev)):
-        noise = scale * jax.random.normal(
-            jax.random.fold_in(key, i), l.shape, jnp.float32
-        )
+        lkey = jax.random.fold_in(key, i)
+        noise = jax.vmap(
+            lambda cid: scale
+            * jax.random.normal(jax.random.fold_in(lkey, cid), l.shape[1:], jnp.float32)
+        )(ids)
         adv = (p.astype(jnp.float32)[None] + noise).astype(l.dtype)
         out.append(jnp.where(_row(bad_mask, l), adv, l))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -158,14 +175,19 @@ def apply_update_attack(
     byzantine_scale: float = 20.0,
     z_max: float = 1.2,
     eps: float = 0.5,
+    client_ids=None,
 ):
     """Static dispatch (scenario is a Python string, resolved at trace time)
     of the update-level attacks on stacked proposals.  Data-level scenarios
     (clean/flipping/noisy) poison shards before training and are a no-op here.
+    ``client_ids`` maps rows to original client ids when the stack has been
+    compacted (byzantine noise is keyed per client id; alie/ipm draw no RNG
+    and their benign-masked moments are compaction-invariant).
     """
     if scenario == "byzantine":
         return byzantine_update_tree(
-            proposals, w_prev, bad_mask, key, scale=byzantine_scale
+            proposals, w_prev, bad_mask, key, scale=byzantine_scale,
+            client_ids=client_ids,
         )
     if scenario == "alie":
         return alie_update_tree(proposals, bad_mask, benign_mask, z_max=z_max)

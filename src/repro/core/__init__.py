@@ -26,10 +26,12 @@ from repro.core.extra_rules import (
 from repro.core.reputation import (
     ReputationState,
     block_probability,
+    gather_reputation,
     init_reputation,
     mark_blocked_round,
     min_rounds_to_block,
     p_good,
+    scatter_reputation,
     update_reputation,
 )
 
@@ -58,6 +60,8 @@ __all__ = [
     "ReputationState",
     "init_reputation",
     "update_reputation",
+    "gather_reputation",
+    "scatter_reputation",
     "mark_blocked_round",
     "p_good",
     "block_probability",

@@ -58,6 +58,10 @@ class AFAResult(NamedTuple):
     good_mask: jnp.ndarray         # (K,) bool — True = kept
     rounds: jnp.ndarray            # scalar int — outlier-removal rounds run
     similarities: jnp.ndarray      # (K,) final-round cosine similarities
+    # set by dispatch_rule / dispatch_rule_tree: True when the participation
+    # mask was empty, in which case the aggregate is a zero update and the
+    # caller must keep the previous parameters
+    all_blocked: jnp.ndarray | bool = False
 
 
 def _weights(mask, p, n):
@@ -135,7 +139,15 @@ def afa_aggregate(
         bad = _mark_bad(s, mask, xi, config.ddof)
         return (mask & ~bad, xi + config.delta_xi, jnp.any(bad), rounds + 1, s)
 
-    s0 = jnp.zeros((K,), jnp.float32)
+    # round-0 similarities, NOT zeros, when max_rounds=0: the loop never runs
+    # and downstream reputation updates would otherwise see all-zero
+    # similarities.  With max_rounds >= 1 the first body iteration computes
+    # the identical sims and overwrites s, so the zeros initializer is used
+    # there to avoid a redundant O(K d) pass (max_rounds is jit-static).
+    s0 = (
+        sims(_weights(mask0, p_k, n_k)) if config.max_rounds == 0
+        else jnp.zeros((K,), jnp.float32)
+    )
     mask, xi, _, rounds, s = jax.lax.while_loop(
         cond, body, (mask0, jnp.float32(config.xi0), jnp.bool_(True), jnp.int32(0), s0)
     )
@@ -230,7 +242,11 @@ def afa_aggregate_tree(
         bad = _mark_bad(s, mask, xi, config.ddof)
         return (mask & ~bad, xi + config.delta_xi, jnp.any(bad), rounds + 1, s)
 
-    s0 = jnp.zeros((K,), jnp.float32)
+    # round-0 similarities (see the matrix form): never all-zero at max_rounds=0
+    s0 = (
+        sims(_weights(mask0, p_k, n_k)) if config.max_rounds == 0
+        else jnp.zeros((K,), jnp.float32)
+    )
     mask, xi, _, rounds, s = jax.lax.while_loop(
         cond, body, (mask0, jnp.float32(config.xi0), jnp.bool_(True), jnp.int32(0), s0)
     )

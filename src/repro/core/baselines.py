@@ -50,6 +50,10 @@ EPS = 1e-12
 class AggResult(NamedTuple):
     aggregate: jnp.ndarray
     good_mask: jnp.ndarray
+    # True when the participation mask was empty: the aggregate is then a
+    # zero *update* (dispatch zeroes it) and callers must keep the previous
+    # model instead of adopting it (set by dispatch_rule / dispatch_rule_tree)
+    all_blocked: jnp.ndarray | bool = False
 
 
 def _use_pallas(use_kernels: bool) -> bool:
@@ -273,15 +277,37 @@ def register_rule(
     return spec
 
 
+def _guard_all_blocked(res, mask):
+    """Post-dispatch guard for the empty-participation round.
+
+    When every client is masked out (e.g. AFA eventually blocks the whole
+    cohort under a majority attack) the rules' internal weight normalizations
+    divide by their EPS floor and emit an all-zero weight vector — FA/AFA
+    would silently return a zero aggregate (resetting the model), comed's
+    ±inf fills would surface as the aggregate.  The dispatch layer instead
+    returns an explicit zero *update* plus an ``all_blocked`` flag; engines
+    keep the previous parameters when the flag is set.  When any client is
+    live the ``where`` is the identity, bit for bit.
+    """
+    if mask is None:
+        return res._replace(all_blocked=jnp.bool_(False))
+    all_blocked = ~jnp.any(mask)
+    aggregate = jax.tree_util.tree_map(
+        lambda l: jnp.where(all_blocked, jnp.zeros_like(l), l), res.aggregate
+    )
+    return res._replace(aggregate=aggregate, all_blocked=all_blocked)
+
+
 def dispatch_rule(name: str, updates, n_k, p_k=None, mask=None,
                   opts: RuleOptions = RuleOptions()):
     """Matrix-form dispatch: updates is (K, d).  Returns the rule's native
-    result (``.aggregate`` vector + ``.good_mask``, AFA adds extras)."""
+    result (``.aggregate`` vector + ``.good_mask`` + ``.all_blocked``, AFA
+    adds extras)."""
     try:
         spec = RULES[name]
     except KeyError:
         raise ValueError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
-    return spec.matrix_fn(updates, n_k, p_k, mask, opts)
+    return _guard_all_blocked(spec.matrix_fn(updates, n_k, p_k, mask, opts), mask)
 
 
 def dispatch_rule_tree(name: str, stacked, n_k, p_k=None, mask=None,
@@ -301,7 +327,7 @@ def dispatch_rule_tree(name: str, stacked, n_k, p_k=None, mask=None,
 def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str, opts: RuleOptions):
     spec = RULES[name]
     if spec.tree_fn is not None:
-        return spec.tree_fn(stacked, n_k, p_k, mask, opts)
+        return _guard_all_blocked(spec.tree_fn(stacked, n_k, p_k, mask, opts), mask)
 
     from repro.utils.trees import flatten_to_matrix, unflatten_from_vector
 
@@ -309,7 +335,8 @@ def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str, opts: RuleOptions)
     K = leaves[0].shape[0]
     res = spec.matrix_fn(flatten_to_matrix(stacked, K), n_k, p_k, mask, opts)
     template = jax.tree_util.tree_map(lambda l: l[0], stacked)
-    return res._replace(aggregate=unflatten_from_vector(res.aggregate, template))
+    res = res._replace(aggregate=unflatten_from_vector(res.aggregate, template))
+    return _guard_all_blocked(res, mask)
 
 
 def _mkrum_rule(u, n_k, p_k, mask, o: RuleOptions):

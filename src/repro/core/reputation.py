@@ -82,6 +82,53 @@ def mark_blocked_round(
     return jnp.where(newly, jnp.int32(round_index) + 1, rounds_blocked)
 
 
+def gather_reputation(state: ReputationState, keep, pad_to: int) -> ReputationState:
+    """Compact the per-client posteriors to the kept index map.
+
+    ``keep`` holds the original client ids that stay resident (ascending);
+    the result has ``pad_to`` entries on the client axis, with pad entries
+    permanently blocked (``alpha = beta = 1`` keeps ``betainc`` finite, and
+    ``blocked = True`` zeroes them out of every mask-driven computation).
+    Operates on the LAST axis so the vmapped seed sweep's ``(n_seeds, K)``
+    leaves compact with the same helper.
+    """
+    keep = jnp.asarray(keep, jnp.int32)
+    pad = pad_to - keep.shape[0]
+
+    def take(leaf, fill):
+        out = jnp.take(leaf, keep, axis=-1)
+        if pad > 0:
+            widths = [(0, 0)] * (out.ndim - 1) + [(0, pad)]
+            out = jnp.pad(out, widths, constant_values=fill)
+        return out
+
+    return ReputationState(
+        alpha=take(state.alpha, 1.0),
+        beta=take(state.beta, 1.0),
+        blocked=take(state.blocked, True),
+    )
+
+
+def scatter_reputation(
+    full: ReputationState, compact: ReputationState, keep
+) -> ReputationState:
+    """Re-embed a compacted posterior into the full-K layout (inverse of
+    :func:`gather_reputation`; non-kept entries keep their pre-compaction
+    values, which is exact because removed clients are blocked and blocking
+    freezes their posterior)."""
+    keep = jnp.asarray(keep, jnp.int32)
+    n = keep.shape[0]
+
+    def put(f, c):
+        return f.at[..., keep].set(c[..., :n])
+
+    return ReputationState(
+        alpha=put(full.alpha, compact.alpha),
+        beta=put(full.beta, compact.beta),
+        blocked=put(full.blocked, compact.blocked),
+    )
+
+
 def min_rounds_to_block(alpha0: float = 3.0, beta0: float = 3.0, delta: float = 0.95) -> int:
     """Smallest n with I_{0.5}(alpha0, beta0 + n) > delta.
 

@@ -5,7 +5,13 @@ from repro.data.synthetic import (
     make_spambase_like,
     make_token_stream,
 )
-from repro.data.sharding import dirichlet_shards, iid_shards, padded_stack
+from repro.data.sharding import (
+    compact_stack,
+    dirichlet_shards,
+    iid_shards,
+    padded_stack,
+    pow2_bucket,
+)
 
 __all__ = [
     "SyntheticClassification",
@@ -16,4 +22,6 @@ __all__ = [
     "iid_shards",
     "dirichlet_shards",
     "padded_stack",
+    "compact_stack",
+    "pow2_bucket",
 ]

@@ -1,7 +1,9 @@
 """Client shard construction: IID (the paper splits training data equally
 across clients) and Dirichlet non-IID (standard fed-learning benchmark),
 plus the padded ``(K, n_max, ...)`` stacking the fused round engine samples
-minibatches from on device."""
+minibatches from on device and its inverse, ``compact_stack``, which the
+segmented fused engine uses to drop blocked clients between scan segments
+(DESIGN.md §2)."""
 
 from __future__ import annotations
 
@@ -38,6 +40,42 @@ def padded_stack(shards):
         y_pad[k, :n] = y
         lengths[k] = n
     return x_pad, y_pad, lengths
+
+
+def compact_stack(x_pad, y_pad, lengths, keep, pad_to: int | None = None):
+    """Inverse of :func:`padded_stack` restricted to the kept client rows.
+
+    Gathers rows ``keep`` (an index map of still-live clients, ascending) out
+    of the padded ``(K, n_max, ...)`` stacks into a dense ``(K_live, n_max,
+    ...)`` layout, optionally re-padded to ``pad_to`` rows (the segmented
+    fused engine pads ``K_live`` up to a power-of-two bucket so the segment
+    scan re-traces only O(log K) times).  Pad rows carry zero shards with
+    ``length = 1`` — the device batch draw is ``randint(0, length)``, which
+    needs a non-empty range, and a pad row's gathered batch is all-zeros and
+    masked out of every aggregate anyway.
+    """
+    keep = np.asarray(keep, np.int64)
+    x_c, y_c = x_pad[keep], y_pad[keep]
+    len_c = np.asarray(lengths)[keep]
+    if pad_to is not None and pad_to > len(keep):
+        extra = pad_to - len(keep)
+        x_c = np.concatenate([x_c, np.zeros((extra,) + x_c.shape[1:], x_c.dtype)])
+        y_c = np.concatenate([y_c, np.zeros((extra,) + y_c.shape[1:], y_c.dtype)])
+        len_c = np.concatenate([len_c, np.ones((extra,), len_c.dtype)])
+    return x_c, y_c, len_c
+
+
+def pow2_bucket(n_live: int, cap: int) -> int:
+    """Smallest power of two >= ``n_live``, clamped to ``[1, cap]``.
+
+    The segmented fused engine sizes its compacted client axis by bucket so
+    the number of distinct shapes (and therefore scan retraces) over a whole
+    simulation is O(log K), not O(#blocking events).
+    """
+    b = 1
+    while b < n_live:
+        b *= 2
+    return max(1, min(b, cap))
 
 
 def dirichlet_shards(

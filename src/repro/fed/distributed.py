@@ -11,12 +11,22 @@ Maps AFA onto the production mesh (see DESIGN.md §4):
 Three client-memory modes (cfg.fed_mode):
   * ``vmap``  — K proposals live simultaneously, K on the leading axis.
   * ``scan``  — FSDP-sharded params; clients run sequentially via lax.map;
-    proposals stored in bf16 sharded over the full mesh.
+    proposals stored in bf16 sharded over the full mesh.  Blocked clients
+    are SKIPPED at runtime: the sequential map wraps each client's training
+    in ``lax.cond`` on its blocked bit, so a blocked row costs a branch, not
+    a local-SGD pass (its stored proposal is ``w_t``, which every masked
+    aggregate ignores) — the in-jit counterpart of the simulator's
+    segmented-compaction index map (DESIGN.md §2/§4).
   * ``remat`` — proposals are never stored: 3 streaming passes (plain
     aggregate+norms → similarities → masked weighted sum), re-running client
     training instead of holding K×N bytes.  A federated-layer analogue of
     activation rematerialization (beyond-paper; DESIGN.md §Perf).
     One screening round (Algorithm 1 with max_rounds=1) per fed round.
+
+For host-driven loops that can afford a re-trace, ``compact_fed_batch``
+applies the same index map at the shape level: it gathers the live clients'
+batch rows (vmap mode pays FLOPs per resident row, so dropping blocked rows
+is the only way to stop paying for them there).
 """
 
 from __future__ import annotations
@@ -26,9 +36,15 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.afa import AFAConfig, _mark_bad, _weights, afa_aggregate_tree
-from repro.core.reputation import ReputationState, p_good, update_reputation
+from repro.core.reputation import (
+    ReputationState,
+    gather_reputation,
+    p_good,
+    update_reputation,
+)
 from repro.optim import sgd_momentum
 from repro.utils.trees import tree_dot
 
@@ -163,10 +179,25 @@ def make_fed_round(model, cfg: FedRoundConfig):
 
         def fed_round(params, rep: ReputationState, n_k, batch):
             mask0 = ~rep.blocked
-            proposals = jax.lax.map(
-                lambda cb: _store(_client_train(loss_fn, opt, params, cb, microbatch=cfg.microbatch), params),
-                batch,
-            )
+
+            def one_client(inp):
+                cb, is_blocked = inp
+                # lax.map runs clients sequentially, so cond here executes
+                # only the taken branch: a blocked client's local SGD never
+                # runs — blocking genuinely reduces computation (the paper's
+                # efficiency claim), instead of training a masked-out row.
+                # The stored proposal for a blocked row is w_t, inert under
+                # every masked aggregate.
+                prop = jax.lax.cond(
+                    is_blocked,
+                    lambda: params,
+                    lambda: _client_train(
+                        loss_fn, opt, params, cb, microbatch=cfg.microbatch
+                    ),
+                )
+                return _store(prop, params)
+
+            proposals = jax.lax.map(one_client, (batch, rep.blocked))
             res = afa_aggregate_tree(
                 _load(proposals, params), n_k, p_good(rep), mask0=mask0, config=cfg.afa
             )
@@ -245,3 +276,33 @@ def make_fed_round(model, cfg: FedRoundConfig):
         raise ValueError(f"unknown fed mode {cfg.mode}")
 
     return fed_round
+
+
+def compact_fed_batch(batch, n_k, rep: ReputationState, pad_to: int | None = None):
+    """Shape-level compaction for host-driven vmap-mode loops.
+
+    Gathers the live clients' rows out of ``batch`` / ``n_k`` / ``rep`` with
+    the same index-map convention as the simulator's segmented fused engine
+    (``keep`` ascending original ids; optional pad rows blocked with zero
+    weight).  Returns ``(batch_c, n_k_c, rep_c, keep)`` — the caller re-jits
+    at the compacted K (vmap mode holds every resident row's proposal, so
+    dropping blocked rows is what stops paying FLOPs for them) and can
+    scatter per-client outputs back through ``keep``.
+    """
+    blocked = np.asarray(rep.blocked)
+    keep = np.nonzero(~blocked)[0]
+    pad_to = len(keep) if pad_to is None else pad_to
+    pad = pad_to - len(keep)
+    keep_j = jnp.asarray(keep, jnp.int32)
+
+    def take_rows(l):
+        out = jnp.take(l, keep_j, axis=0)
+        if pad > 0:
+            widths = [(0, pad)] + [(0, 0)] * (out.ndim - 1)
+            out = jnp.pad(out, widths)
+        return out
+
+    batch_c = jax.tree_util.tree_map(take_rows, batch)
+    n_k_c = take_rows(jnp.asarray(n_k))
+    rep_c = gather_reputation(rep, keep_j, pad_to)
+    return batch_c, n_k_c, rep_c, keep

@@ -30,6 +30,24 @@ ServerState)`` as carry, minibatch indices drawn *on device* with
 per-round test error emitted as a scan output.  Host↔device syncs drop from
 O(T) to O(1), and a whole simulation becomes a vmappable value — ``run_sweep``
 maps it over a seed axis in a single device program.
+
+The **segmented** form (``make_fused_segment``) is the same scan cut into
+segments of S rounds so the host can *compact* blocked clients out of the
+stacked layout between segments (DESIGN.md §2): the simulator gathers the
+still-live rows into a power-of-two bucket, the round body receives the
+kept clients' ORIGINAL ids through ``client_ids``, and every per-client RNG
+stream (dropout keys, minibatch draws, byzantine noise) is keyed by original
+id — never by row position or stack shape — so the compacted run is
+bit-identical to the uncompacted one while paying FLOPs only for ~K_live
+rows.  This is AFA's headline efficiency claim (blocking *reduces*
+computation) made true in the implementation.
+
+RNG stream separation (shared by all four engines): per-client keys are
+``fold_in(fold_in(PRNGKey(seed), CLIENT_STREAM), round * K + client_id)``
+with K the FULL client count — injective over (round, client), so keys never
+collide across rounds (the old ``PRNGKey(round * 1000 + k)`` collided as soon
+as K >= 1000) and never collide with the attack stream (``fold_in(PRNGKey(
+seed), round)``) or the device minibatch stream (under ``BATCH_STREAM``).
 """
 
 from __future__ import annotations
@@ -58,19 +76,36 @@ class EngineConfig(NamedTuple):
     ipm_eps: float = 0.5
 
 
-def client_keys(rnd: int, num_clients: int) -> jnp.ndarray:
-    """Stacked per-client RNG keys, identical to the looped engine's
-    ``PRNGKey(rnd * 1000 + k)`` so both engines draw the same dropout masks.
+# fold_in constants separating the per-client RNG streams from each other and
+# from the attack-noise stream (``fold_in(PRNGKey(seed), rnd)``):
+#   CLIENT_STREAM — dropout/local-SGD keys
+#   BATCH_STREAM  — device-side minibatch index draws (fused engines)
+_CLIENT_STREAM = 0xC11E47
+_BATCH_STREAM = 0x0B47C4
 
-    Built as one host array + a single device put (K eager ``PRNGKey`` calls
-    cost several ms per round at K = 50): a threefry key for seed s < 2^32 is
-    the (2,) uint32 pair [s >> 32, s & 0xffffffff] = [0, s].
+
+def client_keys_traced(seed, rnd, client_ids, num_clients: int) -> jnp.ndarray:
+    """Stacked per-client RNG keys for (possibly traced) ``seed``/``rnd``:
+
+        fold_in(fold_in(PRNGKey(seed), CLIENT_STREAM), rnd * K + client_id)
+
+    ``num_clients`` is the FULL experiment client count K (injectivity of
+    ``rnd * K + id`` needs the true stride), while ``client_ids`` may be any
+    subset/ordering of ``0..K-1`` — the segmented fused engine passes the
+    compaction index map so surviving clients keep their exact key stream.
     """
-    seeds = np.uint64(rnd) * np.uint64(1000) + np.arange(num_clients, dtype=np.uint64)
-    pair = np.stack(
-        [(seeds >> np.uint64(32)).astype(np.uint32), seeds.astype(np.uint32)], axis=1
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), _CLIENT_STREAM)
+    ids = jnp.asarray(client_ids, jnp.uint32)
+    offsets = jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(num_clients) + ids
+    return jax.vmap(lambda o: jax.random.fold_in(base, o))(offsets)
+
+
+def client_keys(seed: int, rnd: int, num_clients: int) -> jnp.ndarray:
+    """Host-eager form of :func:`client_keys_traced` over all K clients —
+    the per-round key stack of the looped and batched engines."""
+    return client_keys_traced(
+        seed, rnd, jnp.arange(num_clients, dtype=jnp.uint32), num_clients
     )
-    return jnp.asarray(pair)
 
 
 def attack_key(seed: int, rnd: int) -> jnp.ndarray:
@@ -80,12 +115,14 @@ def attack_key(seed: int, rnd: int) -> jnp.ndarray:
 
 def _train_and_attack(
     loss_fn, cfg: EngineConfig, params, batch, keys, train_mask, bad_mask,
-    benign_mask, akey,
+    benign_mask, akey, client_ids=None,
 ):
     """The shared proposal pipeline: vmapped local SGD over the stacked
     client axis, non-trainer rows reset to ``w_t``, update-level attacks
     applied by mask.  ONE implementation traced by both the batched per-round
-    step and the fused scan body, so the engines cannot drift apart."""
+    step and the fused scan body, so the engines cannot drift apart.
+    ``client_ids`` maps rows to original client ids under compaction (None =
+    identity layout)."""
     K = train_mask.shape[0]
 
     def train_one(cbatch, ckey):
@@ -104,6 +141,7 @@ def _train_and_attack(
         byzantine_scale=cfg.byzantine_scale,
         z_max=cfg.alie_z_max,
         eps=cfg.ipm_eps,
+        client_ids=client_ids,
     )
 
 
@@ -152,20 +190,61 @@ class FusedTrajectory(NamedTuple):
     blocked: jnp.ndarray     # (T, K) bool — blocked set AFTER each round
 
 
-def client_keys_traced(rnd, num_clients: int) -> jnp.ndarray:
-    """In-jit twin of :func:`client_keys`: same ``PRNGKey(rnd * 1000 + k)``
-    threefry pairs, built from a (possibly traced) round scalar.  Valid while
-    ``rnd * 1000 + K`` fits in uint32 (rounds < ~4.29M)."""
-    seeds = (
-        jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(1000)
-        + jnp.arange(num_clients, dtype=jnp.uint32)
+def _round_body(
+    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    num_clients_total, batch_s, batch_b,
+    carry, rnd, seed, data: FusedData, bad, client_ids,
+):
+    """ONE fused round, parameterized over a (possibly compacted) client
+    layout.  ``bad`` and ``client_ids`` are traced ``(K_rows,)`` arrays so
+    the same trace serves every compaction state at a given bucket size;
+    ``num_clients_total`` is the full experiment K, the stride of the
+    per-client RNG streams.  All per-client randomness — minibatch indices,
+    dropout keys, byzantine noise — is keyed by ORIGINAL client id, making
+    the round bit-invariant to dropping masked-out rows."""
+    from repro.fed.server import server_step
+
+    params, state = carry
+    skip_bad = cfg.scenario in UPDATE_ATTACK_SCENARIOS
+    mask0 = ~state.reputation.blocked
+    train_mask = mask0 & ~bad if skip_bad else mask0
+
+    base = jax.random.PRNGKey(seed)
+    ids = jnp.asarray(client_ids, jnp.uint32)
+    offsets = jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(num_clients_total) + ids
+
+    # device-side minibatch draw: one key per (round, client), per-client
+    # maxval — pad rows carry length 1 so the draw range is never empty
+    bbase = jax.random.fold_in(base, _BATCH_STREAM)
+    bkeys = jax.vmap(lambda o: jax.random.fold_in(bbase, o))(offsets)
+    idx = jax.vmap(
+        lambda k, n: jax.random.randint(k, (batch_s, batch_b), 0, n)
+    )(bkeys, data.lengths)
+    batch = {
+        "x": jax.vmap(lambda xs, ix: xs[ix])(data.x, idx),
+        "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
+    }
+    proposals = _train_and_attack(
+        loss_fn, cfg, params, batch,
+        client_keys_traced(seed, rnd, ids, num_clients_total),
+        train_mask, bad & mask0, mask0 & ~bad,
+        jax.random.fold_in(base, rnd),
+        client_ids=ids,
     )
-    return jnp.stack([jnp.zeros_like(seeds), seeds], axis=1)
 
-
-# fold_in constant separating the device minibatch-index stream from the
-# attack-noise stream (which keeps the host engines' fold_in(key, rnd) form)
-_BATCH_STREAM = 0x0B47C4
+    state, res = server_step(
+        state, proposals, data.n_k, mask0,
+        rule=rule, opts=opts, delta_block=delta_block, layout="tree",
+    )
+    # empty-participation guard: a zero update keeps the previous params
+    # (identity, bit for bit, whenever any client is live)
+    params = jax.tree_util.tree_map(
+        lambda prev, new: jnp.where(res.all_blocked, prev, new),
+        params, res.aggregate,
+    )
+    err = err_fn(params, data.x_test, data.y_test)
+    out = FusedTrajectory(err, res.good_mask, state.reputation.blocked)
+    return (params, state), out
 
 
 def make_fused_sim(
@@ -198,10 +277,11 @@ def make_fused_sim(
       time: the bit-equivalence reference for the scan
       (``tests/test_fused_engine.py``).
 
-    Blocked clients keep their row in every fixed-shape computation (their
-    batches still gather, their ``local_sgd`` still runs) and are excluded
-    only by mask at the attack/aggregation stages — the known FLOPs-on-
-    zero-batches limitation of vmapped paths (DESIGN.md §2).
+    In this one-shot form blocked clients keep their row in every fixed-shape
+    computation (their batches still gather, their ``local_sgd`` still runs)
+    and are excluded only by mask — use the segmented form
+    (:func:`make_fused_segment` via ``SimConfig.segment_rounds``) to compact
+    blocked clients out of the stack between segments (DESIGN.md §2).
 
     Cached on the full static signature so repeated simulations (benchmark
     repeats, sweep construction) reuse the compiled scan.
@@ -218,40 +298,16 @@ def _make_fused_sim_cached(
     loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
     num_clients, num_rounds, batch_s, batch_b, bad_tuple, alpha0, beta0,
 ):
-    from repro.fed.server import server_step
-
     K = num_clients
     bad = jnp.asarray(bad_tuple)
-    skip_bad = cfg.scenario in UPDATE_ATTACK_SCENARIOS
+    ids = jnp.arange(K, dtype=jnp.uint32)
+    body = functools.partial(
+        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block,
+        K, batch_s, batch_b,
+    )
 
     def round_fn(carry, rnd, seed, data: FusedData):
-        params, state = carry
-        mask0 = ~state.reputation.blocked
-        train_mask = mask0 & ~bad if skip_bad else mask0
-
-        # device-side minibatch draw: one key per round, per-client maxval
-        base = jax.random.PRNGKey(seed)
-        bkey = jax.random.fold_in(jax.random.fold_in(base, _BATCH_STREAM), rnd)
-        idx = jax.random.randint(
-            bkey, (K, batch_s, batch_b), 0, data.lengths[:, None, None]
-        )
-        batch = {
-            "x": jax.vmap(lambda xs, ix: xs[ix])(data.x, idx),
-            "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
-        }
-        proposals = _train_and_attack(
-            loss_fn, cfg, params, batch, client_keys_traced(rnd, K),
-            train_mask, bad & mask0, mask0 & ~bad,
-            jax.random.fold_in(base, rnd),
-        )
-
-        state, res = server_step(
-            state, proposals, data.n_k, mask0,
-            rule=rule, opts=opts, delta_block=delta_block, layout="tree",
-        )
-        err = err_fn(res.aggregate, data.x_test, data.y_test)
-        out = FusedTrajectory(err, res.good_mask, state.reputation.blocked)
-        return (res.aggregate, state), out
+        return body(carry, rnd, seed, data, bad, ids)
 
     @jax.jit
     def scan_fn(params0, seed, data: FusedData):
@@ -268,6 +324,73 @@ def _make_fused_sim_cached(
     # the eager form is jit'd HERE, inside the cache, so repeated
     # fused_eager simulations reuse its compile like the scan does
     return scan_fn, jax.jit(round_fn)
+
+
+# ---------------------------------------------------------------------------
+# segmented fused engine — S-round scan chunks with inter-segment compaction
+# ---------------------------------------------------------------------------
+
+
+def make_fused_segment(
+    loss_fn,
+    err_fn,
+    cfg: EngineConfig,
+    *,
+    rule: str,
+    opts,
+    delta_block: float,
+    num_clients_total: int,
+    seg_len: int,
+    batch_s: int,
+    batch_b: int,
+):
+    """Build one S-round segment of the fused simulation (DESIGN.md §2).
+
+    Returns ``segment_fn(params, state, seed, data, bad, client_ids,
+    seg_start) -> (params', state', traj)``: a jit'd ``lax.scan`` of the
+    shared round body over rounds ``seg_start .. seg_start + seg_len``.  The
+    client axis is whatever the caller compacted to — ``data`` / ``state`` /
+    ``bad`` / ``client_ids`` carry ``K_bucket`` rows, and since the bucket is
+    read off the argument shapes, ONE cached ``segment_fn`` serves every
+    compaction state (jit re-traces only when the bucket or ``seg_len``
+    changes, i.e. O(log K) times over a simulation).  ``seg_start`` and
+    ``seed`` are traced, so stepping through segments never retraces.
+
+    Compaction contract (the simulator upholds it): ``client_ids[:K_live]``
+    are the surviving original ids ascending, pad rows are blocked in
+    ``state`` with ``length = 1`` zero shards in ``data``; the round body's
+    per-client RNG streams then reproduce the uncompacted run bit for bit.
+    """
+    return _make_fused_segment_cached(
+        loss_fn, err_fn, cfg, rule, opts, float(delta_block),
+        int(num_clients_total), int(seg_len), int(batch_s), int(batch_b),
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _make_fused_segment_cached(
+    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    num_clients_total, seg_len, batch_s, batch_b,
+):
+    body = functools.partial(
+        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block,
+        num_clients_total, batch_s, batch_b,
+    )
+
+    @jax.jit
+    def segment_fn(params, state, seed, data: FusedData, bad, client_ids, seg_start):
+        rounds = (
+            jnp.asarray(seg_start, jnp.int32)
+            + jnp.arange(seg_len, dtype=jnp.int32)
+        )
+        (params, state), traj = jax.lax.scan(
+            lambda c, r: body(c, r, seed, data, bad, client_ids),
+            (params, state),
+            rounds,
+        )
+        return params, state, traj
+
+    return segment_fn
 
 
 def sweep_fused_sim(scan_fn, sizes, seeds, data: FusedData):

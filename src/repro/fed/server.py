@@ -38,9 +38,11 @@ from repro.core import (
     ReputationState,
     dispatch_rule,
     dispatch_rule_tree,
+    gather_reputation,
     init_reputation,
     mark_blocked_round,
     p_good,
+    scatter_reputation,
     update_reputation,
 )
 
@@ -94,6 +96,47 @@ def init_server_state(
         reputation=init_reputation(num_clients, alpha0, beta0),
         rounds_blocked=jnp.full((num_clients,), -1, jnp.int32),
         round=jnp.int32(0),
+    )
+
+
+def gather_server_state(state: ServerState, keep, pad_to: int) -> ServerState:
+    """Compact the full-K server state to the kept clients (+ pad rows).
+
+    ``keep`` is the segmented fused engine's index map of still-live clients;
+    the result carries ``pad_to`` client entries, pads permanently blocked
+    (``rounds_blocked = -1`` — a pad is never a real client, so it reads as
+    "never blocked").  The round counter stays absolute.  Leaf gathers act on
+    the LAST axis so vmapped sweep states ``(n_seeds, K)`` compact with the
+    same helper.
+    """
+    keep = jnp.asarray(keep, jnp.int32)
+    pad = pad_to - keep.shape[0]
+    rb = jnp.take(state.rounds_blocked, keep, axis=-1)
+    if pad > 0:
+        widths = [(0, 0)] * (rb.ndim - 1) + [(0, pad)]
+        rb = jnp.pad(rb, widths, constant_values=-1)
+    return ServerState(
+        reputation=gather_reputation(state.reputation, keep, pad_to),
+        rounds_blocked=rb,
+        round=state.round,
+    )
+
+
+def scatter_server_state(
+    full: ServerState, compact: ServerState, keep
+) -> ServerState:
+    """Re-embed a compacted server state into the full-K layout (inverse of
+    :func:`gather_server_state`).  Non-kept clients keep their pre-compaction
+    entries — exact, because only blocked clients are ever dropped and
+    blocking freezes their posterior and bookkeeping."""
+    keep = jnp.asarray(keep, jnp.int32)
+    n = keep.shape[0]
+    return ServerState(
+        reputation=scatter_reputation(full.reputation, compact.reputation, keep),
+        rounds_blocked=full.rounds_blocked.at[..., keep].set(
+            compact.rounds_blocked[..., :n]
+        ),
+        round=compact.round,
     )
 
 
@@ -222,7 +265,12 @@ class FedServer:
             rule=self.cfg.rule, opts=self.rule_options(mask0),
             delta_block=self.cfg.delta_block, layout=layout,
         )
-        info = {"good_mask": np.asarray(res.good_mask)}
+        info = {
+            "good_mask": np.asarray(res.good_mask),
+            # empty participation round: the aggregate is a zero update and
+            # the engine must keep the previous parameters
+            "all_blocked": bool(np.asarray(res.all_blocked)),
+        }
         if RULES[self.cfg.rule].updates_reputation:
             info.update(
                 rounds=int(res.rounds),

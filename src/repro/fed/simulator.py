@@ -18,19 +18,25 @@ Four round engines (DESIGN.md §2), selected by ``SimConfig.engine``:
     on device with ``jax.random`` from padded ``(K, n_max, ...)`` shard
     stacks, and the per-round trajectory emitted as scan outputs.  O(1)
     host↔device syncs per simulation instead of O(T); ``run_sweep`` vmaps it
-    over a seed axis.
+    over a seed axis.  With ``SimConfig.segment_rounds > 0`` the scan is cut
+    into S-round segments and (``compact=True``) blocked clients are
+    compacted out of the stacked layout between segments — power-of-two
+    buckets, original-id-keyed RNG streams — producing a bit-identical
+    trajectory while paying FLOPs only for live clients (DESIGN.md §2).
   * ``fused_eager`` — the fused round body run eagerly one round at a time:
     the bit-equivalence reference for the fused scan
     (``tests/test_fused_engine.py``).
 
-``batched`` and ``looped`` draw minibatch indices from the same host numpy
-stream and key the attack noise identically, so on fixed seeds they produce
-matching per-round trajectories (test error, ``good_mask`` history); see
-``tests/test_round_engine.py``.  The fused engines share the attack-key and
-client-key schemes but draw minibatch indices from a ``jax.random`` stream
-(there is no host RNG inside a scan), so fused trajectories are equivalent in
-distribution — not bitwise — to the host engines'; the batched engine stays
-the reference implementation of the round itself.
+All four engines key per-client RNG as ``fold_in(fold_in(PRNGKey(seed),
+CLIENT_STREAM), round * K + k)`` and the attack noise as
+``fold_in(PRNGKey(seed), round)``.  ``batched`` and ``looped`` additionally
+draw minibatch indices from the same host numpy stream, so on fixed seeds
+they produce matching per-round trajectories (test error, ``good_mask``
+history); see ``tests/test_round_engine.py``.  The fused engines draw
+minibatch indices from a ``jax.random`` stream instead (there is no host RNG
+inside a scan), so fused trajectories are equivalent in distribution — not
+bitwise — to the host engines'; the batched engine stays the reference
+implementation of the round itself.
 
 Byzantine clients skip training entirely and send w_t + N(0, 20^2 I) (the
 paper's update-level fault); flipping/noisy clients poison their *shard* and
@@ -52,7 +58,13 @@ from repro.attacks import (
     flip_labels,
     noisy_features,
 )
-from repro.data import SyntheticClassification, iid_shards, padded_stack
+from repro.data import (
+    SyntheticClassification,
+    compact_stack,
+    iid_shards,
+    padded_stack,
+    pow2_bucket,
+)
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
 from repro.fed.engine import (
@@ -61,6 +73,7 @@ from repro.fed.engine import (
     FusedTrajectory,
     attack_key,
     client_keys,
+    make_fused_segment,
     make_fused_sim,
     make_train_attack_step,
     sweep_fused_sim,
@@ -68,8 +81,10 @@ from repro.fed.engine import (
 from repro.fed.server import (
     FedServer,
     ServerConfig,
+    gather_server_state,
     init_server_state,
     make_rule_options,
+    scatter_server_state,
 )
 from repro.utils.trees import tree_stack
 
@@ -91,6 +106,11 @@ class SimConfig:
     sharding: str = "iid"        # iid | dirichlet (non-IID label skew)
     dirichlet_alpha: float = 0.5
     engine: str = "batched"      # batched | looped | fused | fused_eager
+    # fused engine only: > 0 cuts the one-shot scan into segments of this
+    # many rounds, with host-side compaction of blocked clients between
+    # segments when ``compact`` is set (0 = single scan, no compaction)
+    segment_rounds: int = 0
+    compact: bool = True
 
 
 @dataclasses.dataclass
@@ -103,7 +123,9 @@ class SimResult:
     good_mask_history: list
     detection_rate: float       # fraction of bad clients blocked by the end
     mean_rounds_to_block: float
-    round_time: float = 0.0     # mean per round: batch draw + train + aggregate
+    round_time: float = 0.0     # mean per round: batch draw + train +
+                                # aggregate + eval dispatch (host engines eval
+                                # in-loop, symmetric with the fused scan)
     round_times: list = dataclasses.field(default_factory=list)  # raw per-round
 
 
@@ -226,6 +248,8 @@ def run_simulation(
     if sim.engine == "looped":
         return _run_looped(setup, server_cfg, eval_every)
     if sim.engine == "fused":
+        if sim.segment_rounds > 0:
+            return _run_fused_segmented(setup, server_cfg, eval_every)
         return _run_fused(setup, server_cfg, eval_every)
     if sim.engine == "fused_eager":
         return _run_fused(setup, server_cfg, eval_every, eager=True)
@@ -271,7 +295,7 @@ def _run_batched(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Si
 
         t0 = time.perf_counter()
         proposals = step(
-            params, batch, client_keys(rnd, K),
+            params, batch, client_keys(sim.seed, rnd, K),
             jnp.asarray(train_mask), bad_j & jnp.asarray(mask0),
             jnp.asarray(benign), attack_key(sim.seed, rnd),
         )
@@ -279,7 +303,9 @@ def _run_batched(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Si
         t_train += time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        params, info = server.aggregate_tree(proposals, setup.n_k, selected)
+        agg, info = server.aggregate_tree(proposals, setup.n_k, selected)
+        if not info["all_blocked"]:  # zero update: keep previous params
+            params = agg
         jax.block_until_ready(params)
         t_agg += time.perf_counter() - t0
         good_hist.append(info.get("good_mask"))
@@ -322,6 +348,7 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
         benign = mask0 & ~setup.bad_mask
 
         t0 = time.perf_counter()
+        keys = client_keys(sim.seed, rnd, K)  # shared per-client key scheme
         per_client = [params] * K  # non-trainers hold w_t (masked out later)
         for k in trainers:
             x, y = setup.poisoned[k]
@@ -330,7 +357,7 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
                 "y": jnp.asarray(y[idx[k]].astype(np.int32)),
             }
             per_client[k] = local_sgd(
-                dnn_loss, params, batches, jax.random.PRNGKey(rnd * 1000 + k),
+                dnn_loss, params, batches, keys[k],
                 lr=sim.lr, momentum=sim.momentum, dropout=sim.dropout,
             )
         stacked = tree_stack(per_client)
@@ -345,7 +372,9 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
         # same registry tree dispatch as the batched engine, so the two
         # engines differ only in the client layer (per-client jit vs vmap)
         t0 = time.perf_counter()
-        params, info = server.aggregate_tree(stacked, setup.n_k, selected)
+        agg, info = server.aggregate_tree(stacked, setup.n_k, selected)
+        if not info["all_blocked"]:  # zero update: keep previous params
+            params = agg
         jax.block_until_ready(params)
         t_agg += time.perf_counter() - t0
         good_hist.append(info.get("good_mask"))
@@ -366,8 +395,16 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
 # ---------------------------------------------------------------------------
 
 
+def _padded(setup: _Setup):
+    """Host-side padded stacks, cached on the setup (the segmented engine
+    re-gathers from them at every compaction)."""
+    if not hasattr(setup, "_padded_stack"):
+        setup._padded_stack = padded_stack(setup.poisoned)
+    return setup._padded_stack
+
+
 def _fused_data(setup: _Setup) -> FusedData:
-    x_pad, y_pad, lengths = padded_stack(setup.poisoned)
+    x_pad, y_pad, lengths = _padded(setup)
     return FusedData(
         x=jnp.asarray(x_pad),
         y=jnp.asarray(y_pad),
@@ -438,6 +475,136 @@ def _run_fused(
     )
 
 
+# ---------------------------------------------------------------------------
+# segmented fused engine — inter-segment compaction of blocked clients
+# ---------------------------------------------------------------------------
+
+
+def _compact_inputs(setup: _Setup, kept: np.ndarray, bucket: int):
+    """Gather the kept clients' device inputs into a ``bucket``-row layout.
+
+    ``kept`` is the ascending index map of still-live original client ids;
+    pad rows (``bucket - len(kept)``) carry zero shards of length 1, zero
+    ``n_k``, benign ``bad`` and id 0 — all inert, since their server-state
+    rows are blocked.
+    """
+    x_pad, y_pad, lengths = _padded(setup)
+    x_c, y_c, len_c = compact_stack(x_pad, y_pad, lengths, kept, pad_to=bucket)
+    n_live = len(kept)
+    n_k_c = np.zeros((bucket,), np.float32)
+    n_k_c[:n_live] = setup.n_k[kept]
+    bad_c = np.zeros((bucket,), bool)
+    bad_c[:n_live] = setup.bad_mask[kept]
+    ids_c = np.zeros((bucket,), np.uint32)
+    ids_c[:n_live] = kept
+    data = FusedData(
+        x=jnp.asarray(x_c),
+        y=jnp.asarray(y_c),
+        lengths=jnp.asarray(len_c),
+        n_k=jnp.asarray(n_k_c),
+        x_test=setup.x_test,
+        y_test=setup.y_test,
+    )
+    return data, jnp.asarray(bad_c), jnp.asarray(ids_c)
+
+
+def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int):
+    """Segment scan for this experiment's static configuration (cached in
+    ``make_fused_segment`` — one trace per (bucket shape, seg_len))."""
+    sim = setup.sim
+    return make_fused_segment(
+        dnn_loss, dnn_error, setup.engine_config(),
+        rule=server_cfg.rule,
+        opts=make_rule_options(server_cfg, sim.num_clients),
+        delta_block=server_cfg.delta_block,
+        num_clients_total=sim.num_clients,
+        seg_len=seg_len,
+        batch_s=setup.batch_s,
+        batch_b=setup.batch_b,
+    )
+
+
+def _run_fused_segmented(
+    setup: _Setup, server_cfg: ServerConfig, eval_every: int
+) -> SimResult:
+    """The fused simulation as S-round scan segments with host-side
+    compaction in between (DESIGN.md §2).
+
+    Between segments the host reads the blocked set (the only device→host
+    sync, O(T / S) of them), gathers the still-live clients' shard stacks /
+    ``n_k`` / reputation posteriors / attack masks into a dense power-of-two
+    bucket via the ``kept`` index map, and re-embeds the compacted
+    ``ServerState`` into the full-K layout afterwards.  Because every
+    per-client RNG stream is keyed by original client id and dropped rows
+    were mask-zeroed in every reduction, the stitched trajectory is
+    bit-identical to the one-shot fused scan — but post-blocking segments pay
+    client FLOPs only for ~K_live rows.
+    """
+    sim = setup.sim
+    K, T, S = sim.num_clients, sim.rounds, sim.segment_rounds
+    seed = jnp.uint32(sim.seed)
+
+    test_error = np.zeros((T,), np.float64)
+    good = np.zeros((T, K), bool)
+    round_times = np.zeros((T,), np.float64)
+
+    params = setup.params0
+    # full-K container: holds the frozen state of clients dropped at earlier
+    # compactions; the live rows' state lives in ``state_c`` and is scattered
+    # back only at bucket boundaries (and once at the end) — the steady-state
+    # per-segment host work is a single K_bucket-bool sync
+    state_full = init_server_state(K, server_cfg.alpha0, server_cfg.beta0)
+    state_c = state_full
+    data_c, bad_c, ids_c = None, None, None
+    kept = np.arange(K)
+    bucket = None
+
+    seg_start = 0
+    while seg_start < T:
+        t0 = time.perf_counter()
+        seg_len = min(S, T - seg_start)
+        if sim.compact:
+            blocked_c = np.asarray(state_c.reputation.blocked)[: len(kept)]
+            live = kept[~blocked_c]
+        else:
+            live = np.arange(K)
+        new_bucket = pow2_bucket(len(live), K)
+        if bucket != new_bucket:
+            # bucket boundary crossed: preserve the rows being dropped, then
+            # compact to the smaller layout (the first iteration lands here
+            # too, with the identity map at bucket = K and nothing to save)
+            if bucket is not None:
+                state_full = scatter_server_state(state_full, state_c, kept)
+            bucket, kept = new_bucket, live
+            data_c, bad_c, ids_c = _compact_inputs(setup, kept, bucket)
+            state_c = gather_server_state(state_full, kept, bucket)
+        seg_fn = _segment_fn(setup, server_cfg, seg_len)
+        params, state_c, traj = seg_fn(
+            params, state_c, seed, data_c, bad_c, ids_c, jnp.int32(seg_start)
+        )
+        jax.block_until_ready(traj)
+
+        # stitch the (seg_len, bucket) segment outputs into full-K rows via
+        # the index map; dropped clients keep the default good_mask = False
+        # (they are blocked, exactly what the one-shot scan emits for them)
+        end = seg_start + seg_len
+        test_error[seg_start:end] = np.asarray(traj.test_error, np.float64)
+        good[seg_start:end, kept] = np.asarray(traj.good_mask)[:, : len(kept)]
+        round_times[seg_start:end] = (time.perf_counter() - t0) / seg_len
+        seg_start = end
+
+    state_full = scatter_server_state(state_full, state_c, kept)
+    errs = test_error * 100.0
+    test_error_list = [
+        float(errs[r]) for r in range(T) if r % eval_every == 0 or r == T - 1
+    ]
+    good_hist = [gm for gm in good]
+    return setup.result(
+        np.asarray(state_full.rounds_blocked), test_error_list, good_hist,
+        0.0, 0.0, list(round_times),
+    )
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Per-seed trajectories/detection stats of a vmapped fused sweep."""
@@ -464,21 +631,94 @@ def run_sweep(
     model init, the device minibatch stream, and the attack-noise stream.
     Replaces the Python-loop-over-seeds grid with a single jit dispatch —
     the entry point for adaptive-attack and prior-sensitivity sweeps.
+
+    With ``sim.segment_rounds > 0`` the sweep runs segmented, compacting on
+    the UNION of live clients across seeds between segments (a client stays
+    resident while any seed still has it unblocked — per-seed masks handle
+    the rest, so each seed's trajectory stays bit-identical to its
+    unsegmented run).
     """
     setup = _Setup(data, sim)
+    if sim.segment_rounds > 0:
+        return _run_sweep_segmented(setup, server_cfg, seeds)
     fdata = _fused_data(setup)
     scan_fn, _ = _make_setup_sim(setup, server_cfg)
     _, state, traj = sweep_fused_sim(scan_fn, setup.sizes, seeds, fdata)
     jax.block_until_ready(traj)
 
-    blocked_round = np.asarray(state.rounds_blocked)
+    return _sweep_result(setup, seeds, np.asarray(state.rounds_blocked),
+                         np.asarray(traj.test_error, np.float64),
+                         np.asarray(traj.good_mask))
+
+
+def _sweep_result(setup, seeds, blocked_round, test_error, good_mask):
     stats = [detection_stats(br, setup.bad) for br in blocked_round]
     return SweepResult(
         seeds=np.asarray(seeds),
-        test_error=np.asarray(traj.test_error, np.float64) * 100.0,
-        good_mask_history=np.asarray(traj.good_mask),
+        test_error=test_error * 100.0,
+        good_mask_history=good_mask,
         blocked_round=blocked_round,
         bad_clients=setup.bad,
         detection_rate=np.asarray([r for r, _ in stats]),
         mean_rounds_to_block=np.asarray([m for _, m in stats]),
+    )
+
+
+def _run_sweep_segmented(
+    setup: _Setup, server_cfg: ServerConfig, seeds
+) -> SweepResult:
+    """Segmented + compacted seed sweep: the per-segment scan is vmapped over
+    the seed axis, and compaction drops a client only once it is blocked in
+    EVERY seed (union of live sets — the index map must be shared across the
+    vmapped program, whose shapes are common to all seeds)."""
+    sim = setup.sim
+    K, T, S = sim.num_clients, sim.rounds, sim.segment_rounds
+    n = len(seeds)
+    seeds_u32 = jnp.asarray(np.asarray(seeds, np.uint32))
+
+    params = jax.vmap(
+        lambda s: init_dnn(jax.random.PRNGKey(s), setup.sizes)
+    )(seeds_u32)
+    state0 = init_server_state(K, server_cfg.alpha0, server_cfg.beta0)
+    state_full = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), state0
+    )
+    state_c = state_full
+    data_c, bad_c, ids_c = None, None, None
+    kept = np.arange(K)
+    bucket = None
+
+    test_error = np.zeros((n, T), np.float64)
+    good = np.zeros((n, T, K), bool)
+
+    seg_start = 0
+    while seg_start < T:
+        seg_len = min(S, T - seg_start)
+        if sim.compact:
+            # (n, K_bucket) -> live iff unblocked in ANY seed
+            blocked_c = np.asarray(state_c.reputation.blocked)[:, : len(kept)]
+            live = kept[~blocked_c.all(axis=0)]
+        else:
+            live = np.arange(K)
+        new_bucket = pow2_bucket(len(live), K)
+        if bucket != new_bucket:
+            if bucket is not None:
+                state_full = scatter_server_state(state_full, state_c, kept)
+            bucket, kept = new_bucket, live
+            data_c, bad_c, ids_c = _compact_inputs(setup, kept, bucket)
+            state_c = gather_server_state(state_full, kept, bucket)
+        seg_fn = _segment_fn(setup, server_cfg, seg_len)
+        params, state_c, traj = jax.vmap(
+            seg_fn, in_axes=(0, 0, 0, None, None, None, None)
+        )(params, state_c, seeds_u32, data_c, bad_c, ids_c, jnp.int32(seg_start))
+        jax.block_until_ready(traj)
+
+        end = seg_start + seg_len
+        test_error[:, seg_start:end] = np.asarray(traj.test_error, np.float64)
+        good[:, seg_start:end, kept] = np.asarray(traj.good_mask)[:, :, : len(kept)]
+        seg_start = end
+
+    state_full = scatter_server_state(state_full, state_c, kept)
+    return _sweep_result(
+        setup, seeds, np.asarray(state_full.rounds_blocked), test_error, good
     )

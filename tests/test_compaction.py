@@ -1,0 +1,334 @@
+"""Segmented-compaction building blocks and the blocking-related bugfix
+regressions: ``compact_stack`` / ``pow2_bucket`` layout helpers, ServerState
+gather/scatter index-map invariants, the ``all_blocked`` zero-update contract
+of the rule dispatch, the all-blocked fused round keeping the previous
+parameters, the AFA round-0 similarities fix, and the distributed scan-mode
+blocked-row skip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RULES,
+    AFAConfig,
+    RuleOptions,
+    afa_aggregate,
+    afa_aggregate_tree,
+    dispatch_rule,
+    dispatch_rule_tree,
+)
+from repro.data import compact_stack, padded_stack, pow2_bucket
+from repro.fed import (
+    EngineConfig,
+    FusedData,
+    ServerConfig,
+    dnn_error,
+    dnn_loss,
+    gather_server_state,
+    init_dnn,
+    init_server_state,
+    make_fused_segment,
+    make_rule_options,
+    scatter_server_state,
+)
+
+RNG = np.random.default_rng(11)
+
+
+# ------------------------- layout helpers ------------------------------------
+
+
+def test_compact_stack_inverts_padded_stack_on_kept_rows():
+    shards = [
+        (RNG.normal(size=(n, 4)).astype(np.float32), RNG.integers(0, 3, n))
+        for n in (5, 3, 7, 2)
+    ]
+    x, y, lengths = padded_stack(shards)
+    keep = [0, 2]
+    x_c, y_c, len_c = compact_stack(x, y, lengths, keep)
+    assert x_c.shape == (2, 7, 4) and y_c.shape == (2, 7)
+    np.testing.assert_array_equal(len_c, [5, 7])
+    for row, k in enumerate(keep):
+        np.testing.assert_array_equal(x_c[row], x[k])
+        np.testing.assert_array_equal(y_c[row], y[k])
+
+
+def test_compact_stack_pads_to_bucket_with_unit_lengths():
+    shards = [
+        (RNG.normal(size=(n, 4)).astype(np.float32), RNG.integers(0, 3, n))
+        for n in (5, 3, 7)
+    ]
+    x, y, lengths = padded_stack(shards)
+    x_c, y_c, len_c = compact_stack(x, y, lengths, [1], pad_to=4)
+    assert x_c.shape == (4, 7, 4)
+    np.testing.assert_array_equal(len_c, [3, 1, 1, 1])  # pads: length 1,
+    assert (x_c[1:] == 0).all() and (y_c[1:] == 0).all()  # zero shards
+
+
+def test_pow2_bucket():
+    assert pow2_bucket(0, 16) == 1
+    assert pow2_bucket(1, 16) == 1
+    assert pow2_bucket(3, 16) == 4
+    assert pow2_bucket(6, 10) == 8
+    assert pow2_bucket(9, 10) == 10   # capped at K
+    assert pow2_bucket(120, 200) == 128
+
+
+# -------------------- ServerState gather / scatter ---------------------------
+
+
+def _random_state(K):
+    st = init_server_state(K)
+    rep = st.reputation._replace(
+        alpha=jnp.asarray(RNG.uniform(3, 9, K), jnp.float32),
+        beta=jnp.asarray(RNG.uniform(3, 9, K), jnp.float32),
+        blocked=jnp.asarray(RNG.uniform(size=K) < 0.4),
+    )
+    return st._replace(
+        reputation=rep,
+        rounds_blocked=jnp.asarray(RNG.integers(-1, 5, K), jnp.int32),
+        round=jnp.int32(7),
+    )
+
+
+def test_gather_scatter_server_state_roundtrip():
+    """scatter(gather(state)) restores the full state exactly — reputation
+    indices survive compaction."""
+    K = 9
+    full = _random_state(K)
+    keep = np.nonzero(~np.asarray(full.reputation.blocked))[0]
+    compact = gather_server_state(full, keep, pow2_bucket(len(keep), K))
+    # pad rows are inert: blocked, never-blocked bookkeeping
+    n = len(keep)
+    assert bool(np.asarray(compact.reputation.blocked)[n:].all())
+    np.testing.assert_array_equal(np.asarray(compact.rounds_blocked)[n:], -1)
+    # kept rows carry their original posteriors
+    np.testing.assert_array_equal(
+        np.asarray(compact.reputation.alpha)[:n],
+        np.asarray(full.reputation.alpha)[keep],
+    )
+    restored = scatter_server_state(full, compact, keep)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(restored), jax.tree_util.tree_leaves(full)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gather_scatter_handle_sweep_axis():
+    """The helpers act on the LAST axis, so vmapped sweep states (n_seeds, K)
+    compact with the same code path."""
+    K, n_seeds = 6, 3
+    full = _random_state(K)
+    full = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (n_seeds,) + l.shape), full
+    )
+    keep = np.asarray([0, 2, 5])
+    compact = gather_server_state(full, keep, 4)
+    assert compact.reputation.alpha.shape == (n_seeds, 4)
+    restored = scatter_server_state(full, compact, keep)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(restored), jax.tree_util.tree_leaves(full)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------- all_blocked contract ------------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_dispatch_rule_all_blocked_returns_zero_update(rule):
+    """Regression: with every client masked out the rules' weight
+    normalizations divide by EPS — AFA/FA silently emitted a zero aggregate
+    (resetting the model), comed's ±inf fills leaked.  Dispatch now returns
+    an explicit zero update + all_blocked flag for EVERY rule."""
+    K, d = 6, 24
+    U = jnp.asarray(RNG.normal(size=(K, d)).astype(np.float32))
+    n_k = jnp.ones((K,), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.zeros((K,), bool)
+    res = dispatch_rule(rule, U, n_k, p_k, mask, RuleOptions())
+    assert bool(np.asarray(res.all_blocked))
+    np.testing.assert_array_equal(np.asarray(res.aggregate), np.zeros(d))
+    assert not np.asarray(res.good_mask).any()
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_dispatch_rule_tree_all_blocked_returns_zero_update(rule):
+    K = 6
+    stacked = {
+        "w": jnp.asarray(RNG.normal(size=(K, 4, 3)).astype(np.float32)),
+        "b": jnp.asarray(RNG.normal(size=(K, 3)).astype(np.float32)),
+    }
+    n_k = jnp.ones((K,), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.zeros((K,), bool)
+    res = dispatch_rule_tree(rule, stacked, n_k, p_k, mask, RuleOptions())
+    assert bool(np.asarray(res.all_blocked))
+    assert (np.asarray(res.aggregate["w"]) == 0).all()
+    assert (np.asarray(res.aggregate["b"]) == 0).all()
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_dispatch_rule_live_mask_unchanged_bitwise(rule):
+    """The guard must be the identity whenever any client is live — same
+    aggregate, bit for bit, as before the fix."""
+    K, d = 6, 24
+    U = jnp.asarray(RNG.normal(size=(K, d)).astype(np.float32))
+    n_k = jnp.ones((K,), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.asarray([True] * 4 + [False] * 2)
+    res = dispatch_rule(rule, U, n_k, p_k, mask, RuleOptions())
+    assert not bool(np.asarray(res.all_blocked))
+    spec = RULES[rule]
+    raw = spec.matrix_fn(U, n_k, p_k, mask, RuleOptions())
+    np.testing.assert_array_equal(
+        np.asarray(res.aggregate), np.asarray(raw.aggregate)
+    )
+
+
+def test_all_blocked_fused_round_keeps_previous_params():
+    """Integration through the fused scan: with every client already blocked
+    the round must carry w_t forward unchanged (previously the zero aggregate
+    reset the model) and emit a constant, finite error trajectory."""
+    K, d, seg_len = 4, 12, 3
+    sizes = (d, 8, 3)
+    params0 = init_dnn(jax.random.PRNGKey(0), sizes)
+    x = RNG.normal(size=(K, 10, d)).astype(np.float32)
+    y = RNG.integers(0, 3, (K, 10)).astype(np.int32)
+    data = FusedData(
+        x=jnp.asarray(x), y=jnp.asarray(y),
+        lengths=jnp.full((K,), 10, jnp.int32),
+        n_k=jnp.full((K,), 10.0, jnp.float32),
+        x_test=jnp.asarray(RNG.normal(size=(20, d)).astype(np.float32)),
+        y_test=jnp.asarray(RNG.integers(0, 3, 20).astype(np.int32)),
+    )
+    server_cfg = ServerConfig(rule="afa", num_clients=K)
+    seg_fn = make_fused_segment(
+        dnn_loss, dnn_error, EngineConfig(dropout=False),
+        rule="afa", opts=make_rule_options(server_cfg, K),
+        delta_block=server_cfg.delta_block,
+        num_clients_total=K, seg_len=seg_len, batch_s=2, batch_b=4,
+    )
+    state = init_server_state(K)
+    state = state._replace(
+        reputation=state.reputation._replace(blocked=jnp.ones((K,), bool))
+    )
+    params, state_out, traj = seg_fn(
+        params0, state, jnp.uint32(0), data,
+        jnp.zeros((K,), bool), jnp.arange(K, dtype=jnp.uint32), jnp.int32(0),
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params0)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    errs = np.asarray(traj.test_error)
+    assert np.isfinite(errs).all()
+    assert (errs == errs[0]).all()
+    assert not np.asarray(traj.good_mask).any()
+    # posteriors of blocked clients stay frozen
+    np.testing.assert_array_equal(
+        np.asarray(state_out.reputation.alpha), np.asarray(state.reputation.alpha)
+    )
+
+
+# --------------------- AFA round-0 similarities ------------------------------
+
+
+def test_afa_max_rounds_zero_reports_round0_similarities():
+    """Regression: with max_rounds=0 the screening loop never runs and
+    ``AFAResult.similarities`` was the all-zero initializer — downstream
+    reputation updates saw meaningless similarities.  Now the round-0 cosine
+    similarities are returned (and with max_rounds >= 1 the loop overwrites
+    them, so ordinary results are unchanged)."""
+    K, d = 6, 32
+    U = jnp.asarray(RNG.normal(size=(K, d)).astype(np.float32))
+    n_k = jnp.ones((K,), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    for variant in ("iterative", "gram"):
+        cfg = AFAConfig(max_rounds=0, variant=variant)
+        res = afa_aggregate(U, n_k, p_k, config=cfg)
+        assert int(res.rounds) == 0
+        s = np.asarray(res.similarities)
+        assert (s != 0).any(), "similarities must not be the zero initializer"
+        # reference: cosine similarity against the round-0 weighted aggregate
+        w = np.full(K, 1.0 / K)
+        agg = w @ np.asarray(U)
+        ref = (np.asarray(U) @ agg) / (
+            np.linalg.norm(np.asarray(U), axis=1) * np.linalg.norm(agg)
+        )
+        np.testing.assert_allclose(s, ref, rtol=1e-4, atol=1e-5)
+
+    # tree form agrees
+    stacked = {"w": U.reshape(K, 8, 4)}
+    res_t = afa_aggregate_tree(stacked, n_k, p_k, config=AFAConfig(max_rounds=0))
+    np.testing.assert_allclose(
+        np.asarray(res_t.similarities),
+        np.asarray(afa_aggregate(U, n_k, p_k, config=AFAConfig(max_rounds=0)).similarities),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# ------------------ distributed scan mode skips blocked ----------------------
+
+
+def test_scan_mode_blocked_rows_skipped_and_masked_out():
+    """The scan client-memory mode must produce the same aggregate whether a
+    blocked client's row trains or not (its proposal is masked out either
+    way) — and with the cond-skip its local SGD never runs."""
+    from repro.core.reputation import init_reputation
+    from repro.fed.distributed import FedRoundConfig, make_fed_round
+
+    class TinyModel:
+        def loss_fn(self, params, batch, **kw):
+            logits = batch["x"] @ params["w"]
+            return jnp.mean((logits - batch["y"]) ** 2), {}
+
+    K, S, b, d = 4, 2, 8, 6
+    model = TinyModel()
+    params = {"w": jnp.asarray(RNG.normal(size=(d,)).astype(np.float32))}
+    batch = {
+        "x": jnp.asarray(RNG.normal(size=(K, S, b, d)).astype(np.float32)),
+        "y": jnp.asarray(RNG.normal(size=(K, S, b)).astype(np.float32)),
+    }
+    n_k = jnp.ones((K,), jnp.float32)
+    rep = init_reputation(K)
+    rep_blocked = rep._replace(blocked=jnp.asarray([False, True, False, False]))
+
+    fr = make_fed_round(
+        model, FedRoundConfig(num_clients=K, local_steps=S, proposal_dtype="float32", mode="scan")
+    )
+    fr_vmap = make_fed_round(
+        model, FedRoundConfig(num_clients=K, local_steps=S, mode="vmap")
+    )
+    agg_scan, rep2, m_scan = fr(params, rep_blocked, n_k, batch)
+    agg_vmap, _, m_vmap = fr_vmap(params, rep_blocked, n_k, batch)
+    np.testing.assert_allclose(
+        np.asarray(agg_scan["w"]), np.asarray(agg_vmap["w"]), rtol=1e-5, atol=1e-6
+    )
+    # blocked client's posterior untouched, still blocked
+    assert bool(np.asarray(rep2.blocked)[1])
+    np.testing.assert_array_equal(
+        np.asarray(rep2.alpha)[1], np.asarray(rep_blocked.alpha)[1]
+    )
+
+
+def test_compact_fed_batch_gathers_live_rows():
+    from repro.core.reputation import init_reputation
+    from repro.fed.distributed import compact_fed_batch
+
+    K = 5
+    rep = init_reputation(K)
+    rep = rep._replace(blocked=jnp.asarray([False, True, False, True, False]))
+    batch = {"x": jnp.asarray(RNG.normal(size=(K, 3, 2)).astype(np.float32))}
+    n_k = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0], jnp.float32)
+    batch_c, n_k_c, rep_c, keep = compact_fed_batch(batch, n_k, rep, pad_to=4)
+    np.testing.assert_array_equal(keep, [0, 2, 4])
+    assert batch_c["x"].shape == (4, 3, 2)
+    np.testing.assert_array_equal(np.asarray(n_k_c)[:3], [1.0, 3.0, 5.0])
+    np.testing.assert_array_equal(
+        np.asarray(batch_c["x"])[:3], np.asarray(batch["x"])[[0, 2, 4]]
+    )
+    blocked_c = np.asarray(rep_c.blocked)
+    assert not blocked_c[:3].any() and blocked_c[3:].all()

@@ -80,6 +80,63 @@ def test_fused_matches_batched_phenomenology(eq_data):
     assert abs(fused.test_error[-1] - batched.test_error[-1]) < 15.0
 
 
+# --------------------- segmented compaction ----------------------------------
+
+
+def _seg_sim(scenario, rounds=12, **kw):
+    """40% byzantine at K = 10: AFA blocks 4 clients mid-run, dropping the
+    bucket from 10 to 8 — real compaction, not just segmentation."""
+    return SimConfig(
+        num_clients=10, bad_frac=0.4, scenario=scenario, rounds=rounds,
+        local_epochs=2, batch_size=100, hidden=(64, 32), dropout=True, seed=3,
+        engine="fused", **kw,
+    )
+
+
+def _assert_same_trajectory(a, b):
+    np.testing.assert_array_equal(np.asarray(a.test_error), np.asarray(b.test_error))
+    np.testing.assert_array_equal(
+        np.stack(a.good_mask_history), np.stack(b.good_mask_history)
+    )
+    np.testing.assert_array_equal(a.blocked_round, b.blocked_round)
+
+
+def test_segmented_compacted_bit_equals_one_shot_fused(eq_data):
+    """Compaction must be a pure layout change: dropping blocked clients
+    between segments (original-id-keyed RNG streams, masked-zero reductions)
+    produces the SAME (test_error, good_mask, blocked) trajectory, bit for
+    bit, as the one-shot full-K scan."""
+    cfg = ServerConfig(rule="afa", num_clients=10)
+    base = run_simulation(eq_data, _seg_sim("byzantine"), cfg)
+    seg = run_simulation(
+        eq_data, _seg_sim("byzantine", segment_rounds=4, compact=True), cfg
+    )
+    # the scenario actually engages compaction (bucket 10 -> 8)
+    assert int((base.blocked_round > 0).sum()) == 4
+    _assert_same_trajectory(base, seg)
+
+
+def test_segmented_without_compaction_bit_equals_one_shot(eq_data):
+    """Segmentation alone (compact=False keeps every row resident) is also a
+    pure control-flow change — trajectories identical to the single scan."""
+    cfg = ServerConfig(rule="afa", num_clients=10)
+    base = run_simulation(eq_data, _seg_sim("clean", rounds=7), cfg)
+    seg = run_simulation(
+        eq_data, _seg_sim("clean", rounds=7, segment_rounds=3, compact=False), cfg
+    )
+    _assert_same_trajectory(base, seg)
+
+
+def test_segmented_ragged_last_segment(eq_data):
+    """T not divisible by S: the remainder segment stitches correctly."""
+    cfg = ServerConfig(rule="afa", num_clients=10)
+    base = run_simulation(eq_data, _seg_sim("byzantine", rounds=11), cfg)
+    seg = run_simulation(
+        eq_data, _seg_sim("byzantine", rounds=11, segment_rounds=5), cfg
+    )
+    _assert_same_trajectory(base, seg)
+
+
 # ------------------------------ seed sweep -----------------------------------
 
 
@@ -107,6 +164,57 @@ def test_run_sweep_row_matches_single_fused_run(eq_data):
     np.testing.assert_array_equal(sw.blocked_round[0], single.blocked_round)
 
 
+def test_segmented_sweep_matches_unsegmented_sweep(eq_data):
+    """Union-of-live compaction across the seed axis: each seed's row of the
+    segmented sweep equals the unsegmented vmapped sweep bit for bit (a
+    client leaves the stack only when blocked in EVERY seed; per-seed masks
+    cover the rest)."""
+    cfg = ServerConfig(rule="afa", num_clients=10)
+    seeds = [3, 4, 5]
+    base = run_sweep(eq_data, _seg_sim("byzantine"), cfg, seeds)
+    seg = run_sweep(
+        eq_data, _seg_sim("byzantine", segment_rounds=4, compact=True), cfg, seeds
+    )
+    np.testing.assert_array_equal(base.test_error, seg.test_error)
+    np.testing.assert_array_equal(base.good_mask_history, seg.good_mask_history)
+    np.testing.assert_array_equal(base.blocked_round, seg.blocked_round)
+
+
+def test_run_sweep_distinct_seeds_distinct_draws_and_trajectories(eq_data):
+    """Property (over several seed pairs): distinct seeds must yield distinct
+    device minibatch draws and distinct trajectories — guards the seed axis
+    actually threading through the vmapped fused sim, unsegmented AND
+    segmented+compacted.  (A dropped seed axis would silently collapse every
+    sweep row onto one stream.)"""
+    import jax
+
+    from repro.fed.engine import _BATCH_STREAM
+
+    # key-stream level: the engine's per-(seed, round, client) batch keys
+    # (fold_in(fold_in(PRNGKey(seed), BATCH_STREAM), rnd * K + id)) yield
+    # distinct index draws for distinct seeds
+    def draw(seed, rnd, cid, K=10):
+        bkey = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), _BATCH_STREAM),
+            rnd * K + cid,
+        )
+        return np.asarray(jax.random.randint(bkey, (4, 8), 0, 100))
+
+    for s_a, s_b in [(0, 1), (3, 4), (7, 1000)]:
+        for rnd in (0, 5):
+            assert not np.array_equal(draw(s_a, rnd, 2), draw(s_b, rnd, 2))
+
+    # simulation level, through compaction: rows differ pairwise
+    cfg = ServerConfig(rule="afa", num_clients=10)
+    sw = run_sweep(
+        eq_data, _seg_sim("byzantine", segment_rounds=4, compact=True), cfg,
+        [3, 4, 5],
+    )
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert not np.array_equal(sw.test_error[i], sw.test_error[j])
+
+
 # --------------------------- padded stacking ---------------------------------
 
 
@@ -126,10 +234,17 @@ def test_padded_stack_geometry_and_content():
 
 
 def test_client_keys_traced_matches_host_version():
-    """The in-jit key builder must reproduce the host engines' PRNGKey
-    scheme exactly, so all engines draw identical dropout masks."""
+    """The id-subset key builder must reproduce rows of the full key stack:
+    this is the compaction invariant — a surviving client keeps its exact
+    key stream no matter which row it is compacted into."""
     for rnd in (0, 1, 17):
+        full = np.asarray(client_keys(11, rnd, 6))
         np.testing.assert_array_equal(
-            np.asarray(client_keys_traced(jnp.int32(rnd), 6)),
-            np.asarray(client_keys(rnd, 6)),
+            np.asarray(client_keys_traced(11, jnp.int32(rnd), jnp.arange(6, dtype=jnp.uint32), 6)),
+            full,
+        )
+        ids = jnp.asarray([1, 3, 5], jnp.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(client_keys_traced(11, jnp.int32(rnd), ids, 6)),
+            full[[1, 3, 5]],
         )

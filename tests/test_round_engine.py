@@ -67,6 +67,46 @@ def test_unknown_engine_rejected(eq_data):
         _engine_run(eq_data, "clean", "warp")
 
 
+# --------------------------- client key scheme -------------------------------
+
+
+def test_client_keys_injective_across_rounds_at_large_k():
+    """Regression: the old ``PRNGKey(round * 1000 + k)`` collided whenever
+    K >= 1000 (round r, client 1000 == round r+1, client 0), silently giving
+    two different clients identical dropout streams.  The shared scheme
+    ``fold_in(fold_in(PRNGKey(seed), CLIENT_STREAM), round * K + k)`` is
+    injective over (round, client)."""
+    from repro.fed import client_keys
+
+    K = 1001
+    keys = np.concatenate(
+        [np.asarray(client_keys(0, rnd, K)) for rnd in range(3)]
+    )
+    assert len(np.unique(keys, axis=0)) == len(keys)
+
+
+def test_client_keys_disjoint_from_attack_stream():
+    """Client keys live under their own fold_in stream — none of them equals
+    an attack-noise key (the old raw-PRNGKey scheme had no such separation)."""
+    from repro.fed import attack_key, client_keys
+
+    K, rounds = 64, 16
+    ck = np.concatenate([np.asarray(client_keys(5, r, K)) for r in range(rounds)])
+    ak = np.stack([np.asarray(attack_key(5, r)) for r in range(rounds)])
+    ck_set = {tuple(row) for row in ck}
+    assert not any(tuple(row) in ck_set for row in ak)
+
+
+def test_client_keys_depend_on_experiment_seed():
+    """The old scheme ignored the experiment seed entirely; now each seed
+    draws its own dropout streams (what the seed sweep varies)."""
+    from repro.fed import client_keys
+
+    a = np.asarray(client_keys(0, 2, 8))
+    b = np.asarray(client_keys(1, 2, 8))
+    assert not np.array_equal(a, b)
+
+
 # --------------------------- registry dispatch -------------------------------
 
 
