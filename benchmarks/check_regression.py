@@ -1,0 +1,84 @@
+"""Bench regression gate: fail when a recorded speedup regresses vs baseline.
+
+CI runs ``benchmarks/fused_engine.py --tiny`` and then this script against
+the committed ``BENCH_baseline.json`` snapshot.  Every *speedup* scenario
+present in BOTH files is compared; a current speedup below
+``baseline * (1 - tolerance)`` fails the job.  Only the dimensionless
+speedups are gated — absolute per-round seconds vary with the runner, the
+ratios are what the engine work is supposed to protect.  The default 25%
+tolerance absorbs shared-runner noise; scenarios present in only one file
+(new benchmarks, retired ones) are reported but never fail.
+
+The committed ``BENCH_baseline.json`` records CONSERVATIVE reference
+speedups — each set below the range observed across repeated local ``--tiny``
+runs (see its "note" field) — because a ~1ms microbenchmark's run-to-run
+spread on shared runners can itself approach the tolerance.  The gate's job
+is to catch a layout/dispatch change that erases a speedup class (packed
+dropping to ~1x, fused collapsing toward batched), not to relitigate the
+third significant digit.
+
+Usage:  python benchmarks/check_regression.py CURRENT.json BASELINE.json
+            [--tolerance 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def collect_speedups(doc: dict) -> dict[str, float]:
+    """Flatten every speedup scenario of a BENCH_fused_engine.json doc."""
+    out: dict[str, float] = {}
+    for r in doc.get("results", []):
+        out[f"fused_vs_batched/K{r['K']}"] = float(r["speedup"])
+    for r in doc.get("compaction", []):
+        out[f"compaction_post_block/K{r['K']}"] = float(r["post_block_speedup"])
+    for r in doc.get("packed", []):
+        out[f"packed_agg/K{r['K']}/{r.get('rule', 'afa')}"] = float(r["agg_speedup"])
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly generated BENCH json")
+    ap.add_argument("baseline", help="committed baseline BENCH json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional speedup drop before failing")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = collect_speedups(json.load(f))
+    with open(args.baseline) as f:
+        base = collect_speedups(json.load(f))
+
+    shared = sorted(set(cur) & set(base))
+    if not shared:
+        print("check_regression: no shared speedup scenarios — nothing gated")
+        return 1  # a silently empty gate is a broken gate
+
+    failures = []
+    for name in shared:
+        floor = base[name] * (1.0 - args.tolerance)
+        status = "OK" if cur[name] >= floor else "REGRESSED"
+        print(f"{status:9s} {name}: current {cur[name]:.2f}x vs baseline "
+              f"{base[name]:.2f}x (floor {floor:.2f}x)")
+        if cur[name] < floor:
+            failures.append(name)
+    for name in sorted(set(cur) - set(base)):
+        print(f"NEW       {name}: {cur[name]:.2f}x (no baseline — not gated)")
+    for name in sorted(set(base) - set(cur)):
+        print(f"MISSING   {name}: in baseline but not in current run")
+
+    if failures:
+        print(f"\ncheck_regression: {len(failures)} scenario(s) regressed "
+              f">{args.tolerance:.0%} vs baseline: {failures}")
+        return 1
+    print(f"\ncheck_regression: {len(shared)} shared scenario(s) within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

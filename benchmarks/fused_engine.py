@@ -16,11 +16,23 @@ paying full-K FLOPs forever), along with the bucket it settled at.  The
 scenario also ASSERTS that the compacted trajectory equals the one-shot
 fused trajectory bit for bit — compaction must be a pure layout change.
 
+The ``packed`` scenario measures the aggregation hot path alone: one
+registry dispatch on a stacked K=200 proposal tree, legacy per-leaf layout
+(AFA's native tree form) vs the packed ``(K, D)`` path (one ``pack_stack``
+-> matrix rule -> one unpack).  It also ASSERTS that the fused trajectory
+under ``agg_layout="packed"`` (pack once per round in the scan body) is
+BIT-IDENTICAL to ``agg_layout="tree"`` (pack inside the dispatch) — the
+packed threading must be a pure layout change.
+
 Emits ``BENCH_fused_engine.json`` at the repo root (machine-readable record
-for the acceptance gates: >= 2x fused-vs-batched at K = 50, and >= 1.5x
-post-blocking compaction speedup at K = 200, both on CPU) in addition to the
-usual CSV rows.  ``--tiny`` runs a seconds-scale subset for the CI smoke job
-(including the compaction bit-exactness assert at K = 10).
+for the acceptance gates: >= 2x fused-vs-batched at K = 50, >= 1.5x
+post-blocking compaction speedup at K = 200, and >= 1.3x packed-vs-leaf
+aggregation speedup at K = 200, all on CPU) in addition to the usual CSV
+rows.  ``benchmarks/check_regression.py`` gates CI on these speedups against
+the committed ``BENCH_baseline.json``.  ``--tiny`` runs a seconds-scale
+subset for the CI smoke job (including the compaction and packed-layout
+bit-exactness asserts at K = 10; the packed dispatch timing stays at K=200 —
+it involves no training and is cheap).
 """
 
 from __future__ import annotations
@@ -169,6 +181,87 @@ def run_compaction(tiny: bool = False) -> tuple[list[dict], list[dict]]:
     return rows, record
 
 
+# packed-scenario geometry: dispatch timing always at the acceptance point
+# K = 200 (a single registry dispatch on the tiny bench model — no training,
+# cheap even for CI); the layout bit-exactness assert runs a short fused sim
+PACKED_K = 200
+PACKED_LIVE_FRAC = 0.9  # ~10% of clients masked out, as after some blocking
+
+
+def run_packed(tiny: bool = False) -> tuple[list[dict], list[dict]]:
+    """Per-round aggregation speedup of the packed (K, D) path over the
+    legacy per-leaf dispatch, plus the packed-layout bit-exactness assert.
+
+    Timing compares ONE tree dispatch (the per-round aggregation unit) of
+    the paper's rule (AFA, iterative variant) on a stacked K = 200 proposal
+    tree shaped like the bench model: ``layout="leaf"`` walks AFA's native
+    per-leaf contractions, ``layout="packed"`` packs once and runs the
+    matrix form on the contiguous buffer.  Best-of-REPEATS medians, like the
+    engine scenarios.
+    """
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.core import RuleOptions, dispatch_rule_tree
+    from repro.utils.trees import pack_spec
+
+    rng = np.random.default_rng(0)
+    K = PACKED_K
+    sizes = (DIM, *HIDDEN, 1)
+    stacked = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        stacked[f"w{i}"] = jnp.asarray(rng.normal(size=(K, a, b)).astype(np.float32))
+        stacked[f"b{i}"] = jnp.asarray(rng.normal(size=(K, b)).astype(np.float32))
+    D = pack_spec(stacked, stacked=True).dim
+    n_k = jnp.full((K,), float(PER_CLIENT), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=K) < PACKED_LIVE_FRAC)
+    opts = RuleOptions()
+
+    t_leaf = t_packed = float("inf")
+    for _ in range(REPEATS):
+        t_leaf = min(t_leaf, timeit(
+            lambda: dispatch_rule_tree("afa", stacked, n_k, p_k, mask, opts,
+                                       layout="leaf"), warmup=1, iters=10))
+        t_packed = min(t_packed, timeit(
+            lambda: dispatch_rule_tree("afa", stacked, n_k, p_k, mask, opts,
+                                       layout="packed"), warmup=1, iters=10))
+    speedup = t_leaf / max(t_packed, 1e-9)
+
+    # layout bit-exactness: pack-once-per-round in the scan body ("packed")
+    # vs pack-inside-dispatch ("tree") is a pure layout change — identical
+    # fused trajectories, bit for bit, on a byzantine workload with blocking
+    K_sim, rounds = 10, (8 if tiny else 12)
+    data = make_mnist_like(n_train=K_sim * PER_CLIENT, n_test=200, dim=DIM)
+    sim = SimConfig(
+        num_clients=K_sim, bad_frac=COMPACT_BAD_FRAC, scenario="byzantine",
+        rounds=rounds, local_epochs=1, batch_size=BATCH, hidden=HIDDEN,
+        dropout=False, seed=0, engine="fused",
+    )
+    res_p = run_simulation(data, sim, ServerConfig(
+        rule="afa", num_clients=K_sim, agg_layout="packed"))
+    res_t = run_simulation(data, dataclasses.replace(sim), ServerConfig(
+        rule="afa", num_clients=K_sim, agg_layout="tree"))
+    _assert_bit_exact(res_p, res_t, K_sim)
+
+    rows = [
+        {"name": f"fused_engine/packed/K{K}/afa_leaf", "us_per_call": round(t_leaf * 1e6, 1), "derived": ""},
+        {"name": f"fused_engine/packed/K{K}/afa_packed", "us_per_call": round(t_packed * 1e6, 1), "derived": ""},
+        {"name": f"fused_engine/packed/K{K}/agg_speedup", "us_per_call": "", "derived": f"packed={speedup:.2f}x_vs_leaf_D{D}"},
+    ]
+    record = [{
+        "K": K,
+        "D": D,
+        "rule": "afa",
+        "live_frac": PACKED_LIVE_FRAC,
+        "leaf_agg_s": round(t_leaf, 6),
+        "packed_agg_s": round(t_packed, 6),
+        "agg_speedup": round(speedup, 2),
+        "bit_exact": True,
+    }]
+    return rows, record
+
+
 def run(quick: bool = False, tiny: bool = False) -> list[dict]:
     if tiny:
         ks, rounds = [10], 8
@@ -201,6 +294,8 @@ def run(quick: bool = False, tiny: bool = False) -> list[dict]:
         })
     compact_rows, compact_record = run_compaction(tiny=tiny)
     rows.extend(compact_rows)
+    packed_rows, packed_record = run_packed(tiny=tiny)
+    rows.extend(packed_rows)
     with open(OUT_JSON, "w") as f:
         json.dump({
             "workload": {
@@ -210,6 +305,7 @@ def run(quick: bool = False, tiny: bool = False) -> list[dict]:
             },
             "results": record,
             "compaction": compact_record,
+            "packed": packed_record,
         }, f, indent=2)
     return rows
 

@@ -3,12 +3,16 @@
 Two executable forms:
 
 * **matrix form** (``afa_aggregate``): updates as a dense ``(K, d)`` matrix.
-  Used by the paper-scale simulator, the kernels and the benchmarks.
+  Used by the paper-scale simulator, the kernels, the benchmarks — and the
+  default *packed* tree dispatch (DESIGN.md §3), which packs the stacked
+  proposal pytree into one contiguous ``(K, D)`` buffer and runs this form
+  on it.
 * **tree form** (``afa_aggregate_tree``): updates as a pytree with a leading
   client axis on every leaf.  Sharding-preserving — under pjit the per-leaf
   contractions lower to partial dots + psum over the *model* mesh axis and the
   weighted sum to a weighted psum over *data*; the while-loop state is K
-  scalars, replicated.
+  scalars, replicated.  The distributed path and the legacy ``layout="leaf"``
+  dispatch use this form.
 
 Two algorithmic variants (both forms):
 
@@ -48,9 +52,11 @@ class AFAConfig(NamedTuple):
     ddof: int = 0
     variant: str = "iterative"  # "iterative" | "gram"
     # Route the hot ops (gram / cosine-sim / weighted-sum) through the Pallas
-    # kernels.  Honored on TPU only; other backends fall back to the jnp
-    # reference path (matrix form — the tree form is already XLA-fused).
-    use_kernels: bool = False
+    # kernels: bool for auto selection via $REPRO_KERNELS (pallas on TPU, jnp
+    # elsewhere) or a pinned mode string "pallas" / "jnp" / "interpret" (see
+    # repro.kernels.policy).  Matrix form only — the tree form is already
+    # XLA-fused.
+    use_kernels: bool | str = False
 
 
 class AFAResult(NamedTuple):
@@ -99,13 +105,16 @@ def afa_aggregate(
     mask0 = jnp.ones((K,), bool) if mask0 is None else mask0
     upd32 = updates.astype(jnp.float32)
     row_norms = jnp.linalg.norm(upd32, axis=1)
-    use_pallas = config.use_kernels and jax.default_backend() == "tpu"
+    from repro.kernels.policy import resolve_kernel_mode
+
+    mode = resolve_kernel_mode(config.use_kernels)
+    interp = mode == "interpret"
 
     if config.variant == "gram":
-        if use_pallas:
+        if mode != "jnp":
             from repro.kernels import gram as gram_kernel
 
-            gram = gram_kernel(upd32)
+            gram = gram_kernel(upd32, interpret=interp)
         else:
             gram = upd32 @ upd32.T  # (K, K) — single pass over d
 
@@ -114,11 +123,12 @@ def afa_aggregate(
             agg_norm = jnp.sqrt(jnp.maximum(c @ gc, EPS))
             return gc / (jnp.maximum(row_norms, EPS) * agg_norm)
 
-    elif use_pallas:
+    elif mode != "jnp":
         from repro.kernels import cosine_sim, weighted_sum
 
         def sims(c):
-            return cosine_sim(upd32, weighted_sum(c, upd32))
+            return cosine_sim(upd32, weighted_sum(c, upd32, interpret=interp),
+                              interpret=interp)
 
     else:
 
@@ -152,10 +162,10 @@ def afa_aggregate(
         cond, body, (mask0, jnp.float32(config.xi0), jnp.bool_(True), jnp.int32(0), s0)
     )
     w = _weights(mask, p_k, n_k)
-    if use_pallas:
+    if mode != "jnp":
         from repro.kernels import weighted_sum
 
-        agg = weighted_sum(w, upd32).astype(updates.dtype)
+        agg = weighted_sum(w, upd32, interpret=interp).astype(updates.dtype)
     else:
         agg = (w @ upd32).astype(updates.dtype)
     return AFAResult(aggregate=agg, good_mask=mask, rounds=rounds, similarities=s)

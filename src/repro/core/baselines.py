@@ -19,17 +19,29 @@ Registry (DESIGN.md §3): every dispatchable rule registers a ``RuleSpec``
 via ``register_rule``.  A spec carries a *matrix* form ``(updates (K,d), n_k,
 p_k, mask, opts) -> result`` and optionally a native *tree* form over stacked
 pytrees; ``dispatch_rule`` / ``dispatch_rule_tree`` are the single entry
-points (tree dispatch falls back to flatten -> matrix rule -> unflatten, all
-in jnp, so it stays device-resident under jit).  AFA and the extra rules
-register themselves on import (``repro.core`` imports everything).
+points.  AFA and the extra rules register themselves on import
+(``repro.core`` imports everything).
 
-``use_kernels`` policy, uniform across ALL rules: when True *and* the backend
-is TPU, the hot ops (gram / cosine-sim / weighted-sum / coord-median) route
-through the Pallas kernels in ``repro.kernels``; on any other backend the
-flag falls back to this file's jnp reference path (interpret-mode Pallas is
-orders of magnitude slower than XLA on CPU).  Rules whose hot op has no
-kernel (trimmed-mean's sort, geomed/centered-clip's iterations) accept the
-flag for interface uniformity and always use the reference path.  comed's
+Tree dispatch is **packed** by default (DESIGN.md §3): the stacked proposal
+pytree is packed ONCE into a contiguous ``(K, D)`` buffer
+(``utils/trees.pack_stack`` with a cached ``PackSpec``), every rule —
+including AFA, via its matrix form — runs on that one matrix, and the
+aggregate vector unpacks ONCE back to the template tree.  All of it is pure
+jnp reshapes inside jit, so the dispatch stays device-resident.  The legacy
+``layout="leaf"`` route keeps the old per-leaf behavior (AFA's native
+sharding-preserving tree form; per-leaf flatten for the rest) as the
+reference the packed path is benchmarked against and as the layout for
+sharded trees that must not be concatenated.
+
+``use_kernels`` policy, uniform across ALL rules, resolved by
+``repro.kernels.policy.resolve_kernel_mode`` into one of three modes:
+``pallas`` (compiled kernels — TPU), ``jnp`` (this file's reference path),
+``interpret`` (the same Pallas kernel bodies under the interpreter — any
+backend; the CI kernel-parity route).  ``use_kernels=True`` consults
+``$REPRO_KERNELS`` (auto -> pallas on TPU, jnp elsewhere); a mode string
+pins the route.  Rules whose hot op has no kernel (trimmed-mean's sort,
+geomed/centered-clip's iterations) use the reference path under auto
+selection, and trimmed-mean raises on an explicit kernel demand.  comed's
 compare-count kernel computes an *unmasked* median, so its kernel route
 engages only where the mask is host-concrete (the matrix path, rows
 pre-selected); inside jit-traced tree dispatch comed uses the XLA sort
@@ -56,9 +68,11 @@ class AggResult(NamedTuple):
     all_blocked: jnp.ndarray | bool = False
 
 
-def _use_pallas(use_kernels: bool) -> bool:
-    """True iff the Pallas kernel route is both requested and profitable."""
-    return bool(use_kernels) and jax.default_backend() == "tpu"
+def _kernel_mode(use_kernels: bool | str) -> str:
+    """Resolved kernel mode for this call (see repro.kernels.policy)."""
+    from repro.kernels.policy import resolve_kernel_mode
+
+    return resolve_kernel_mode(use_kernels)
 
 
 def _norm_weights(mask, w):
@@ -67,33 +81,37 @@ def _norm_weights(mask, w):
 
 
 def _weighted_rows(c, u32):
-    """(K,) @ (K, d) -> (d,), via the Pallas weighted-sum kernel on TPU."""
+    """(K,) @ (K, d) -> (d,) on the jnp reference path."""
     return (c @ u32).astype(jnp.float32)
 
 
-def _weighted_rows_kernel(c, u32):
+def _weighted_rows_for(mode: str):
+    """Weighted-sum route for a resolved kernel mode."""
+    if mode == "jnp":
+        return _weighted_rows
     from repro.kernels import weighted_sum
 
-    return weighted_sum(c, u32)
+    return functools.partial(weighted_sum, interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels",))
-def fa_aggregate(updates, n_k, p_k=None, mask=None, *, use_kernels: bool = False) -> AggResult:
+def fa_aggregate(updates, n_k, p_k=None, mask=None, *, use_kernels: bool | str = False) -> AggResult:
     K = updates.shape[0]
     mask = jnp.ones((K,), bool) if mask is None else mask
     c = _norm_weights(mask, n_k.astype(jnp.float32))
     u32 = updates.astype(jnp.float32)
-    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    ws = _weighted_rows_for(_kernel_mode(use_kernels))
     return AggResult(ws(c, u32).astype(updates.dtype), mask)
 
 
-def pairwise_sq_dists(updates, *, use_kernels: bool = False):
+def pairwise_sq_dists(updates, *, use_kernels: bool | str = False):
     """K×K squared euclidean distances via the Gram identity (one matmul)."""
     u = updates.astype(jnp.float32)
-    if _use_pallas(use_kernels):
+    mode = _kernel_mode(use_kernels)
+    if mode != "jnp":
         from repro.kernels import gram as gram_kernel
 
-        g = gram_kernel(u)
+        g = gram_kernel(u, interpret=(mode == "interpret"))
     else:
         g = u @ u.T
     sq = jnp.diag(g)
@@ -126,7 +144,7 @@ def mkrum_aggregate(
     ranks = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
     sel = (ranks < m) & mask
     c = _norm_weights(sel, jnp.ones((K,), jnp.float32))
-    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    ws = _weighted_rows_for(_kernel_mode(use_kernels))
     return AggResult(ws(c, updates.astype(jnp.float32)).astype(updates.dtype), sel)
 
 
@@ -140,11 +158,13 @@ def comed_aggregate(updates, n_k=None, p_k=None, mask=None, *, use_kernels: bool
     adapter row-selects on the host first when the mask is concrete.
     """
     K, _ = updates.shape
-    if mask is None and _use_pallas(use_kernels):
+    mode = _kernel_mode(use_kernels)
+    if mask is None and mode != "jnp":
         from repro.kernels import coord_median
 
         return AggResult(
-            coord_median(updates).astype(updates.dtype), jnp.ones((K,), bool)
+            coord_median(updates, interpret=(mode == "interpret")).astype(updates.dtype),
+            jnp.ones((K,), bool),
         )
     mask = jnp.ones((K,), bool) if mask is None else mask
     u = updates.astype(jnp.float32)
@@ -165,16 +185,31 @@ def comed_aggregate(updates, n_k=None, p_k=None, mask=None, *, use_kernels: bool
 
 @functools.partial(jax.jit, static_argnames=("trim", "use_kernels"))
 def trimmed_mean_aggregate(
-    updates, n_k=None, p_k=None, mask=None, *, trim: int, use_kernels: bool = False
+    updates, n_k=None, p_k=None, mask=None, *, trim: int, use_kernels: bool | str = False
 ) -> AggResult:
     """Coordinate-wise mean after dropping ``trim`` extremes from both ends.
-    (Sort-based; no Pallas kernel — ``use_kernels`` is accepted but the jnp
-    reference is the only implementation.)
+
+    ``use_kernels`` honors the kernel policy, but no Pallas kernel covers the
+    per-coordinate sort: under *auto* selection (``False``, or ``True`` with
+    ``$REPRO_KERNELS`` unset/``auto``) the flag is accepted for registry
+    uniformity and this jnp reference runs; an *explicit* kernel demand
+    (``use_kernels="pallas"``/``"interpret"``, or the flag set while
+    ``$REPRO_KERNELS`` pins a kernel mode) raises ``NotImplementedError``
+    instead of silently ignoring the request.
 
     When the live count ``m <= 2 * trim`` the trim window is empty — the rule
     degrades to the masked coordinate-wise mean instead of silently returning
     a zero aggregate (which would reset the model mid-run once blocking
     shrinks participation below the window)."""
+    from repro.kernels.policy import explicit_kernel_request
+
+    explicit = explicit_kernel_request(use_kernels)
+    if explicit in ("pallas", "interpret"):
+        raise NotImplementedError(
+            "trimmed_mean has no Pallas kernel (the hot op is a per-coordinate "
+            f"sort); explicit kernel mode {explicit!r} cannot be honored — use "
+            "use_kernels=False/True (auto) for the jnp reference"
+        )
     K, _ = updates.shape
     mask = jnp.ones((K,), bool) if mask is None else mask
     u32 = updates.astype(jnp.float32)
@@ -233,7 +268,7 @@ def norm_clip_aggregate(
     scale = jnp.minimum(1.0, c / jnp.maximum(norms, EPS))
     u = u * scale[:, None]
     w = _norm_weights(mask, n_k.astype(jnp.float32))
-    ws = _weighted_rows_kernel if _use_pallas(use_kernels) else _weighted_rows
+    ws = _weighted_rows_for(_kernel_mode(use_kernels))
     return AggResult(ws(w, u).astype(updates.dtype), mask)
 
 
@@ -246,12 +281,17 @@ class RuleOptions(NamedTuple):
     """Per-call rule knobs, hashable so the whole bundle can ride through jit
     as a static argument.  ``afa`` holds an ``AFAConfig`` when rule == afa;
     ``num_selected`` (MKRUM) must be host-computed from the concrete
-    participation count (it is a static shape-like parameter)."""
+    participation count (it is a static shape-like parameter).
+
+    ``use_kernels`` may be a bool (auto selection via ``$REPRO_KERNELS``) or
+    a pinned mode string ``"pallas"``/``"jnp"``/``"interpret"``; resolve on
+    the host (``make_rule_options`` does) so the resolved mode — not the
+    ambient env var — keys the jit cache."""
 
     num_byzantine: int = 3
     trim: int = 3
     num_selected: int | None = None
-    use_kernels: bool = False
+    use_kernels: bool | str = False
     afa: Any = None  # AFAConfig | None (typed Any to avoid an import cycle)
 
 
@@ -310,32 +350,59 @@ def dispatch_rule(name: str, updates, n_k, p_k=None, mask=None,
     return _guard_all_blocked(spec.matrix_fn(updates, n_k, p_k, mask, opts), mask)
 
 
+TREE_LAYOUTS = ("packed", "leaf")
+
+
 def dispatch_rule_tree(name: str, stacked, n_k, p_k=None, mask=None,
-                       opts: RuleOptions = RuleOptions()):
+                       opts: RuleOptions = RuleOptions(), *,
+                       layout: str = "packed"):
     """Tree-form dispatch: stacked is a pytree with a leading client axis on
-    every leaf.  Rules with a native tree form (AFA) keep the pytree; the rest
-    flatten to a matrix *inside jit* (pure jnp reshapes — device-resident, no
-    host round-trip) and unflatten the aggregate back.  The whole dispatch is
-    jit'd with (name, opts) static, so per-round host overhead is one cached
-    call."""
+    every leaf.
+
+    ``layout="packed"`` (default, DESIGN.md §3): the tree is packed ONCE into
+    a contiguous ``(K, D)`` buffer (cached ``PackSpec``), the rule's matrix
+    form — AFA's included — runs on that one matrix, and the aggregate vector
+    unpacks ONCE back to the template structure.  All pure jnp reshapes
+    inside jit: device-resident, no host round-trip, and bit-identical to
+    calling ``dispatch_rule`` on ``pack_stack(stacked)`` directly.
+
+    ``layout="leaf"``: the legacy per-leaf path — AFA's native
+    sharding-preserving tree form, per-leaf flatten for matrix-only rules.
+    Kept as the reference the packed path is benchmarked against
+    (``benchmarks/fused_engine.py`` "packed" scenario) and for sharded trees
+    whose leaves must not be concatenated.
+
+    The whole dispatch is jit'd with (name, opts, layout) static, so
+    per-round host overhead is one cached call."""
     if name not in RULES:
         raise ValueError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
-    return _dispatch_tree_jit(stacked, n_k, p_k, mask, name=name, opts=opts)
+    if layout not in TREE_LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; expected {TREE_LAYOUTS}")
+    return _dispatch_tree_jit(stacked, n_k, p_k, mask, name=name, opts=opts,
+                              layout=layout)
 
 
-@functools.partial(jax.jit, static_argnames=("name", "opts"))
-def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str, opts: RuleOptions):
+@functools.partial(jax.jit, static_argnames=("name", "opts", "layout"))
+def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str,
+                       opts: RuleOptions, layout: str = "packed"):
     spec = RULES[name]
-    if spec.tree_fn is not None:
+    if layout == "leaf" and spec.tree_fn is not None:
         return _guard_all_blocked(spec.tree_fn(stacked, n_k, p_k, mask, opts), mask)
+    if layout == "leaf":
+        from repro.utils.trees import flatten_to_matrix, unflatten_from_vector
 
-    from repro.utils.trees import flatten_to_matrix, unflatten_from_vector
+        leaves = jax.tree_util.tree_leaves(stacked)
+        K = leaves[0].shape[0]
+        res = spec.matrix_fn(flatten_to_matrix(stacked, K), n_k, p_k, mask, opts)
+        template = jax.tree_util.tree_map(lambda l: l[0], stacked)
+        res = res._replace(aggregate=unflatten_from_vector(res.aggregate, template))
+        return _guard_all_blocked(res, mask)
 
-    leaves = jax.tree_util.tree_leaves(stacked)
-    K = leaves[0].shape[0]
-    res = spec.matrix_fn(flatten_to_matrix(stacked, K), n_k, p_k, mask, opts)
-    template = jax.tree_util.tree_map(lambda l: l[0], stacked)
-    res = res._replace(aggregate=unflatten_from_vector(res.aggregate, template))
+    from repro.utils.trees import pack_spec, pack_stack, unpack_stack
+
+    pspec = pack_spec(stacked, stacked=True)
+    res = spec.matrix_fn(pack_stack(stacked, pspec), n_k, p_k, mask, opts)
+    res = res._replace(aggregate=unpack_stack(res.aggregate, pspec))
     return _guard_all_blocked(res, mask)
 
 
@@ -350,8 +417,9 @@ def _mkrum_rule(u, n_k, p_k, mask, o: RuleOptions):
 
 
 def _comed_rule(u, n_k, p_k, mask, o: RuleOptions):
+    mode = _kernel_mode(o.use_kernels)
     if (
-        _use_pallas(o.use_kernels)
+        mode != "jnp"
         and mask is not None
         and not isinstance(mask, jax.core.Tracer)
     ):
@@ -361,7 +429,10 @@ def _comed_rule(u, n_k, p_k, mask, o: RuleOptions):
         from repro.kernels import coord_median
 
         sel = jnp.asarray(np.nonzero(np.asarray(mask))[0])
-        return AggResult(coord_median(u[sel]).astype(u.dtype), mask)
+        return AggResult(
+            coord_median(u[sel], interpret=(mode == "interpret")).astype(u.dtype),
+            mask,
+        )
     return comed_aggregate(u, mask=mask, use_kernels=o.use_kernels)
 
 
@@ -372,7 +443,9 @@ register_rule("mkrum", _mkrum_rule)
 register_rule("comed", _comed_rule)
 register_rule(
     "trimmed_mean",
-    lambda u, n, p, m, o: trimmed_mean_aggregate(u, mask=m, trim=o.trim),
+    lambda u, n, p, m, o: trimmed_mean_aggregate(
+        u, mask=m, trim=o.trim, use_kernels=o.use_kernels
+    ),
 )
 register_rule(
     "bulyan",

@@ -191,7 +191,7 @@ class FusedTrajectory(NamedTuple):
 
 
 def _round_body(
-    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block, agg_layout,
     num_clients_total, batch_s, batch_b,
     carry, rnd, seed, data: FusedData, bad, client_ids,
 ):
@@ -201,7 +201,22 @@ def _round_body(
     ``num_clients_total`` is the full experiment K, the stride of the
     per-client RNG streams.  All per-client randomness — minibatch indices,
     dropout keys, byzantine noise — is keyed by ORIGINAL client id, making
-    the round bit-invariant to dropping masked-out rows."""
+    the round bit-invariant to dropping masked-out rows.
+
+    ``agg_layout`` (static) selects the aggregation representation:
+
+    * ``"packed"`` (default) — the stacked proposal pytree is packed ONCE
+      into a contiguous ``(K_rows, D)`` buffer (``utils/trees.pack_stack``
+      with the cached ``PackSpec`` of the params template), ``server_step``
+      dispatches the rule's matrix form on it, and the aggregate vector
+      unpacks ONCE back into the params structure.  Under compaction the
+      client axis is rows of this one matrix, so a bucket change re-gathers
+      a single buffer instead of every leaf.
+    * ``"tree"`` — hand the pytree to the packed tree dispatch (packs inside
+      ``dispatch_rule_tree``); identical math to ``"packed"`` bit for bit.
+    * ``"leaf"`` — the legacy per-leaf path (AFA's native tree form), kept
+      as the benchmark reference.
+    """
     from repro.fed.server import server_step
 
     params, state = carry
@@ -232,19 +247,33 @@ def _round_body(
         client_ids=ids,
     )
 
-    state, res = server_step(
-        state, proposals, data.n_k, mask0,
-        rule=rule, opts=opts, delta_block=delta_block, layout="tree",
-    )
+    if agg_layout == "packed":
+        from repro.utils.trees import pack_spec, pack_stack, unpack_stack
+
+        pspec = pack_spec(params)  # row template: one client's update layout
+        state, res = server_step(
+            state, pack_stack(proposals, pspec), data.n_k, mask0,
+            rule=rule, opts=opts, delta_block=delta_block, layout="packed",
+        )
+        aggregate = unpack_stack(res.aggregate, pspec)
+    else:
+        state, res = server_step(
+            state, proposals, data.n_k, mask0,
+            rule=rule, opts=opts, delta_block=delta_block, layout=agg_layout,
+        )
+        aggregate = res.aggregate
     # empty-participation guard: a zero update keeps the previous params
     # (identity, bit for bit, whenever any client is live)
     params = jax.tree_util.tree_map(
         lambda prev, new: jnp.where(res.all_blocked, prev, new),
-        params, res.aggregate,
+        params, aggregate,
     )
     err = err_fn(params, data.x_test, data.y_test)
     out = FusedTrajectory(err, res.good_mask, state.reputation.blocked)
     return (params, state), out
+
+
+AGG_LAYOUTS = ("packed", "tree", "leaf")
 
 
 def make_fused_sim(
@@ -262,6 +291,7 @@ def make_fused_sim(
     bad_mask: np.ndarray,
     alpha0: float = 3.0,
     beta0: float = 3.0,
+    agg_layout: str = "packed",
 ):
     """Build the fused T-round simulation (DESIGN.md §2).
 
@@ -286,10 +316,13 @@ def make_fused_sim(
     Cached on the full static signature so repeated simulations (benchmark
     repeats, sweep construction) reuse the compiled scan.
     """
+    if agg_layout not in AGG_LAYOUTS:
+        raise ValueError(f"unknown agg_layout {agg_layout!r}; expected {AGG_LAYOUTS}")
     return _make_fused_sim_cached(
         loss_fn, err_fn, cfg, rule, opts, float(delta_block),
         int(num_clients), int(num_rounds), int(batch_s), int(batch_b),
         tuple(bool(b) for b in np.asarray(bad_mask)), float(alpha0), float(beta0),
+        agg_layout,
     )
 
 
@@ -297,12 +330,13 @@ def make_fused_sim(
 def _make_fused_sim_cached(
     loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
     num_clients, num_rounds, batch_s, batch_b, bad_tuple, alpha0, beta0,
+    agg_layout,
 ):
     K = num_clients
     bad = jnp.asarray(bad_tuple)
     ids = jnp.arange(K, dtype=jnp.uint32)
     body = functools.partial(
-        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block,
+        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block, agg_layout,
         K, batch_s, batch_b,
     )
 
@@ -343,6 +377,7 @@ def make_fused_segment(
     seg_len: int,
     batch_s: int,
     batch_b: int,
+    agg_layout: str = "packed",
 ):
     """Build one S-round segment of the fused simulation (DESIGN.md §2).
 
@@ -360,20 +395,27 @@ def make_fused_segment(
     are the surviving original ids ascending, pad rows are blocked in
     ``state`` with ``length = 1`` zero shards in ``data``; the round body's
     per-client RNG streams then reproduce the uncompacted run bit for bit.
+
+    Under ``agg_layout="packed"`` the proposal matrix the rules see is the
+    single ``(K_bucket, D)`` packed buffer, so compaction's effect on the
+    aggregation hot path is exactly a row-count change of one matrix.
     """
+    if agg_layout not in AGG_LAYOUTS:
+        raise ValueError(f"unknown agg_layout {agg_layout!r}; expected {AGG_LAYOUTS}")
     return _make_fused_segment_cached(
         loss_fn, err_fn, cfg, rule, opts, float(delta_block),
         int(num_clients_total), int(seg_len), int(batch_s), int(batch_b),
+        agg_layout,
     )
 
 
 @functools.lru_cache(maxsize=64)
 def _make_fused_segment_cached(
     loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
-    num_clients_total, seg_len, batch_s, batch_b,
+    num_clients_total, seg_len, batch_s, batch_b, agg_layout,
 ):
     body = functools.partial(
-        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block,
+        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block, agg_layout,
         num_clients_total, batch_s, batch_b,
     )
 

@@ -64,15 +64,23 @@ class ServerConfig:
     num_byzantine: int = 3       # f for mkrum/bulyan
     trim: int = 3                # for trimmed_mean
     # Route every rule's hot ops (gram / cosine-sim / weighted-sum /
-    # coord-median) through the Pallas TPU kernels.  Honored uniformly by all
-    # rules via the registry; on non-TPU backends the flag falls back to the
-    # jnp reference path (interpret-mode Pallas is far slower than XLA), so
-    # results are identical and only the TPU execution path changes.  One
-    # scoped exception: comed's compare-count kernel computes an *unmasked*
-    # median, so its kernel route engages on the matrix path (host-concrete
-    # mask, rows pre-selected); the in-jit tree dispatch uses the XLA sort
+    # coord-median) through the Pallas kernels.  A bool selects automatically
+    # via $REPRO_KERNELS (auto -> pallas on TPU, the jnp reference elsewhere —
+    # interpret-mode Pallas is far slower than XLA); a mode string "pallas" /
+    # "jnp" / "interpret" pins the route (repro.kernels.policy).
+    # ``make_rule_options`` resolves the request on the host, so the resolved
+    # mode — not the ambient env var — keys the jit cache.  One scoped
+    # exception: comed's compare-count kernel computes an *unmasked* median,
+    # so its kernel route engages on the matrix path (host-concrete mask,
+    # rows pre-selected); the in-jit tree dispatch uses the XLA sort
     # reference (see DESIGN.md §3).
-    use_kernels: bool = False
+    use_kernels: bool | str = False
+    # Aggregation layout of the tree dispatch (DESIGN.md §3): "packed" packs
+    # the stacked proposal pytree into one contiguous (K, D) buffer and runs
+    # every rule's matrix form on it; "leaf" keeps the legacy per-leaf path
+    # (AFA's native tree form, per-leaf flatten for the rest) — the reference
+    # the packed path is benchmarked against.
+    agg_layout: str = "packed"
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +156,20 @@ def make_rule_options(cfg: ServerConfig, num_participants: int) -> RuleOptions:
     rule's options would retrace the jit'd dispatch each time a client gets
     blocked.  (Only AFA blocks, so under MKRUM the participant count is
     constant and the fused engine can compute it once before tracing.)
+
+    ``use_kernels`` is resolved HERE, on the host: RuleOptions is a static
+    jit argument, so resolving early makes the request key the jit cache
+    instead of being frozen from whatever $REPRO_KERNELS said at first
+    trace.  Only the *env-pinned* part is resolved (an explicit mode string
+    replaces the bool); an auto request stays a bool — the backend it
+    resolves by is fixed per process, and collapsing auto-True into a
+    concrete mode string would make rules without a kernel (trimmed-mean)
+    mistake auto selection on TPU for an explicit pallas demand and raise.
     """
+    from repro.kernels.policy import explicit_kernel_request
+
+    explicit = explicit_kernel_request(cfg.use_kernels)
+    mode = explicit if explicit is not None else bool(cfg.use_kernels)
     return RuleOptions(
         num_byzantine=cfg.num_byzantine,
         trim=cfg.trim,
@@ -156,10 +177,10 @@ def make_rule_options(cfg: ServerConfig, num_participants: int) -> RuleOptions:
             max(num_participants - cfg.num_byzantine - 2, 1)
             if cfg.rule == "mkrum" else None
         ),
-        use_kernels=cfg.use_kernels,
+        use_kernels=mode,
         afa=AFAConfig(
             xi0=cfg.xi0, delta_xi=cfg.delta_xi, variant=cfg.afa_variant,
-            use_kernels=cfg.use_kernels,
+            use_kernels=mode,
         ),
     )
 
@@ -193,16 +214,30 @@ def server_step(
 
     Returns ``(state', result)`` where ``result`` is the rule's native output
     (``.aggregate`` + ``.good_mask``; AFA adds ``rounds``/``similarities``).
-    ``proposals`` is a stacked pytree (``layout="tree"``) or a dense ``(K,
-    d)`` matrix (``layout="matrix"``).  Pure in ``state`` — callable eagerly
-    by :class:`FedServer` (where ``mask0`` is host-concrete, preserving e.g.
-    comed's kernel row-selection) or traced inside the fused ``lax.scan``.
+    ``proposals`` is a stacked pytree (``layout="tree"`` — packed tree
+    dispatch — or ``layout="leaf"`` — the legacy per-leaf path) or a dense
+    ``(K, D)`` matrix (``layout="matrix"``, and its alias ``"packed"`` for a
+    buffer the caller packed with ``utils/trees.pack_stack`` — the fused
+    round body packs once per round and unpacks the aggregate itself).  Pure
+    in ``state`` — callable eagerly by :class:`FedServer` (where ``mask0`` is
+    host-concrete, preserving e.g. comed's kernel row-selection) or traced
+    inside the fused ``lax.scan``.
     """
-    dispatch = dispatch_rule_tree if layout == "tree" else dispatch_rule
-    res = dispatch(
-        rule, proposals, jnp.asarray(n_k, jnp.float32),
-        p_good(state.reputation), mask0, opts,
-    )
+    if layout in ("matrix", "packed"):
+        res = dispatch_rule(
+            rule, proposals, jnp.asarray(n_k, jnp.float32),
+            p_good(state.reputation), mask0, opts,
+        )
+    elif layout in ("tree", "leaf"):
+        res = dispatch_rule_tree(
+            rule, proposals, jnp.asarray(n_k, jnp.float32),
+            p_good(state.reputation), mask0, opts,
+            layout="packed" if layout == "tree" else "leaf",
+        )
+    else:
+        raise ValueError(
+            f"unknown layout {layout!r}; expected tree | leaf | matrix | packed"
+        )
     if RULES[rule].updates_reputation:
         state = _absorb(state, res.good_mask, jnp.asarray(mask0), delta=delta_block)
     else:
@@ -288,5 +323,7 @@ class FedServer:
 
     def aggregate_tree(self, stacked, n_k: jnp.ndarray, selected: np.ndarray):
         """Stacked-pytree layout: every leaf carries a leading client axis.
-        Returns (aggregate pytree, info dict)."""
-        return self._apply(stacked, n_k, selected, "tree")
+        Dispatches through the packed (K, D) path unless the config pins
+        ``agg_layout="leaf"``.  Returns (aggregate pytree, info dict)."""
+        layout = "leaf" if self.cfg.agg_layout == "leaf" else "tree"
+        return self._apply(stacked, n_k, selected, layout)

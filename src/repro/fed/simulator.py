@@ -27,6 +27,12 @@ Four round engines (DESIGN.md §2), selected by ``SimConfig.engine``:
     the bit-equivalence reference for the fused scan
     (``tests/test_fused_engine.py``).
 
+Aggregation representation (``ServerConfig.agg_layout``, DESIGN.md §3): by
+default every engine packs the stacked proposal pytree into one contiguous
+``(K, D)`` buffer per round and runs the rules' matrix forms on it
+("packed"); "tree" packs inside the dispatch instead (bit-identical), and
+"leaf" keeps the legacy per-leaf path as the benchmark reference.
+
 All four engines key per-client RNG as ``fold_in(fold_in(PRNGKey(seed),
 CLIENT_STREAM), round * K + k)`` and the attack noise as
 ``fold_in(PRNGKey(seed), round)``.  ``batched`` and ``looped`` additionally
@@ -430,6 +436,7 @@ def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig):
         bad_mask=setup.bad_mask,
         alpha0=server_cfg.alpha0,
         beta0=server_cfg.beta0,
+        agg_layout=server_cfg.agg_layout,
     )
 
 
@@ -521,6 +528,7 @@ def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int):
         seg_len=seg_len,
         batch_s=setup.batch_s,
         batch_b=setup.batch_b,
+        agg_layout=server_cfg.agg_layout,
     )
 
 

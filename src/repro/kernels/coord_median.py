@@ -12,7 +12,9 @@ per coordinate — pure VPU work with perfect lanes utilization and no data
 movement, a bargain for K <= a few hundred clients.
 
 Grid over d blocks; the (K, K, BLOCK_D) compare cube bounds VMEM, so BLOCK_D
-shrinks as K grows (handled in ops.py).
+shrinks as K grows (handled in ops.py).  Unlike the dot/norm kernels, K is
+NEVER zero-padded here — an extra zero row would shift the median — so the
+client axis stays exact and only d is padded to the block multiple.
 """
 
 from __future__ import annotations

@@ -14,6 +14,11 @@ TPU grid iterations are sequential, so read-modify-write accumulation on the
 outputs is safe; the final divide happens in ops.py (O(K), negligible).
 The dot itself maps to the MXU (K×BLOCK_D @ BLOCK_D×1 as a matmul with the
 aggregate tile broadcast), the squares to the VPU.
+
+Packed-operand contract (ops.py): d is the FULL packed model width, zero-
+padded to a BLOCK_D multiple, and K arrives zero-padded to the 8-row f32
+sublane tile — zero rows contribute zero dots/norms and are sliced off after
+the kernel, so padding is exact.
 """
 
 from __future__ import annotations

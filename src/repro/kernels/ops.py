@@ -1,9 +1,19 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Handle padding (d zero-padded to a block multiple; padded columns are exact
-for the dot/norm reductions and are sliced off for median/weighted-sum),
-block-size selection under a VMEM budget, and the interpret-mode switch
-(interpret=True everywhere except a real TPU backend).
+Handle the packed-operand tiling contract: the aggregation path hands these
+wrappers one contiguous ``(K, D)`` buffer (``utils/trees.pack_stack``) with
+arbitrary K and full model D, so each wrapper
+
+* zero-pads D to a block multiple (padded columns are exact for the
+  dot/norm reductions and are sliced off for median/weighted-sum),
+* zero-pads K to a sublane multiple of 8 where zero rows are exact (gram /
+  cosine-sim / weighted-sum; the coordinate median keeps K exact — an extra
+  zero row would shift the median),
+* picks the D-block (and for gram the K-block) under a VMEM budget, and
+* resolves the interpret switch from the kernel policy
+  (``repro.kernels.policy``): ``$REPRO_KERNELS=interpret`` forces the Pallas
+  interpreter (the CI ``kernel-parity`` route), ``pallas`` forces compiled
+  kernels, ``auto``/``jnp`` interprets everywhere except a real TPU backend.
 """
 
 from __future__ import annotations
@@ -17,13 +27,24 @@ from repro.kernels import coord_median as _cm
 from repro.kernels import cosine_sim as _cs
 from repro.kernels import gram as _gr
 from repro.kernels import weighted_sum as _ws
+from repro.kernels.policy import requested_policy
 
 EPS = 1e-12
 VMEM_BUDGET = 8 * 1024 * 1024  # bytes we allow a block working set to claim
+ROW_TILE = 8                   # f32 sublane multiple the K axis is padded to
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _default_interpret() -> bool:
+    policy = requested_policy()
+    if policy == "interpret":
+        return True
+    if policy == "pallas":
+        return False
+    return not _on_tpu()
 
 
 def _pad_d(x: jnp.ndarray, block_d: int) -> jnp.ndarray:
@@ -35,6 +56,16 @@ def _pad_d(x: jnp.ndarray, block_d: int) -> jnp.ndarray:
     return jnp.pad(x, pad)
 
 
+def _pad_rows(x: jnp.ndarray, mult: int = ROW_TILE) -> jnp.ndarray:
+    """Zero-pad the leading (client) axis to a sublane multiple.  Only used
+    where zero rows are exact: dots, norms, and zero-weighted sums."""
+    K = x.shape[0]
+    rem = (-K) % mult
+    if rem == 0:
+        return x
+    return jnp.pad(x, [(0, rem)] + [(0, 0)] * (x.ndim - 1))
+
+
 def _pick_block_d(d: int, per_elem_bytes: int, preferred: int) -> int:
     """Largest power-of-two block <= preferred whose working set fits VMEM."""
     b = preferred
@@ -43,48 +74,86 @@ def _pick_block_d(d: int, per_elem_bytes: int, preferred: int) -> int:
     return max(min(b, preferred), 128)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def cosine_sim(updates, agg, *, block_d: int | None = None, interpret: bool | None = None):
     """(K, d), (d,) -> (K,) cosine similarities (f32)."""
+    # interpret resolves OUTSIDE the jit boundary: with None as the static
+    # key, the env-derived route would be frozen at first trace and a later
+    # $REPRO_KERNELS change silently ignored (stale-cache hazard)
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cosine_sim_jit(updates, agg, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _cosine_sim_jit(updates, agg, *, block_d: int | None, interpret: bool):
     K, d = updates.shape
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    block_d = block_d or _pick_block_d(d, (K + 1) * 4, 2048)
-    u = _pad_d(updates, block_d)
+    u = _pad_rows(updates)
+    block_d = block_d or _pick_block_d(d, (u.shape[0] + 1) * 4, 2048)
+    u = _pad_d(u, block_d)
     w = _pad_d(agg[None, :], block_d)
     dots, unorm2, wnorm2 = _cs.cosine_sim_parts(u, w, block_d=block_d, interpret=interpret)
-    un = jnp.sqrt(jnp.maximum(unorm2[:, 0], EPS))
+    un = jnp.sqrt(jnp.maximum(unorm2[:K, 0], EPS))
     wn = jnp.sqrt(jnp.maximum(wnorm2[0, 0], EPS))
-    return dots[:, 0] / (un * wn)
+    return dots[:K, 0] / (un * wn)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gram(updates, *, block_d: int | None = None, interpret: bool | None = None):
-    """(K, d) -> (K, K) Gram matrix (f32)."""
+def gram(updates, *, block_d: int | None = None, block_k: int | None = None,
+         interpret: bool | None = None):
+    """(K, d) -> (K, K) Gram matrix (f32).
+
+    ``block_k`` tiles the (K, K) accumulator for packed stacks too wide for
+    one VMEM-resident tile; None keeps the single-tile layout (K <= a few
+    hundred clients)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gram_jit(updates, block_d=block_d, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_k", "interpret"))
+def _gram_jit(updates, *, block_d: int | None, block_k: int | None, interpret: bool):
     K, d = updates.shape
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    block_d = block_d or _pick_block_d(d, K * 4, 2048)
-    return _gr.gram(_pad_d(updates, block_d), block_d=block_d, interpret=interpret)
+    u = _pad_rows(updates)
+    Kp = u.shape[0]
+    if block_k is None and Kp > 512:
+        block_k = 256
+    rows = block_k or Kp
+    block_d = block_d or _pick_block_d(d, 2 * rows * 4, 2048)
+    if block_k is not None:
+        u = _pad_rows(u, block_k)
+    g = _gr.gram(_pad_d(u, block_d), block_d=block_d, block_k=block_k,
+                 interpret=interpret)
+    return g[:K, :K]
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def coord_median(updates, *, block_d: int | None = None, interpret: bool | None = None):
-    """(K, d) -> (d,) coordinate-wise median (f32)."""
+    """(K, d) -> (d,) coordinate-wise median (f32).
+
+    K stays exact (no row padding — a zero pad row would shift the median);
+    the compare cube K*K*block_d bounds the D-block instead."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _coord_median_jit(updates, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _coord_median_jit(updates, *, block_d: int | None, interpret: bool):
     K, d = updates.shape
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    # compare cube is K*K*block_d f32
     block_d = block_d or _pick_block_d(d, K * K * 4, 512)
     u = _pad_d(updates, block_d)
     return _cm.coord_median(u, block_d=block_d, interpret=interpret)[:d]
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def weighted_sum(weights, updates, *, block_d: int | None = None, interpret: bool | None = None):
     """(K,), (K, d) -> (d,) reputation-weighted aggregate (f32)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _weighted_sum_jit(weights, updates, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _weighted_sum_jit(weights, updates, *, block_d: int | None, interpret: bool):
     K, d = updates.shape
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    block_d = block_d or _pick_block_d(d, K * 4, 2048)
-    u = _pad_d(updates, block_d)
-    return _ws.weighted_sum(weights[None, :], u, block_d=block_d, interpret=interpret)[:d]
+    u = _pad_rows(updates)
+    block_d = block_d or _pick_block_d(d, u.shape[0] * 4, 2048)
+    u = _pad_d(u, block_d)
+    c = _pad_rows(weights[:, None])[:, 0]  # zero weight on pad rows: exact
+    return _ws.weighted_sum(c[None, :], u, block_d=block_d, interpret=interpret)[:d]
 
 
 def pairwise_sq_dists_from_gram(g: jnp.ndarray) -> jnp.ndarray:
@@ -92,7 +161,6 @@ def pairwise_sq_dists_from_gram(g: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool | None = None):
     """(B, Lq, Hq, D), (B, Lk, Hkv, D) x2 -> (B, Lq, Hq, D).
@@ -100,9 +168,18 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     GQA handled by broadcasting kv heads before flattening (B, H) -> BH for
     the Pallas kernel; explicit per-head layout, no GSPMD partial-score psums
     (see DESIGN.md §Perf, Perf C)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_attention_jit(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def _flash_attention_jit(q, k, v, *, causal: bool, block_q: int,
+                         block_k: int, interpret: bool):
     from repro.kernels.flash_attn import flash_attention_bh
 
-    interpret = (not _on_tpu()) if interpret is None else interpret
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
     g = hq // hkv

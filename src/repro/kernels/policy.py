@@ -1,0 +1,88 @@
+"""Kernel execution policy: ``pallas`` / ``jnp`` / ``interpret``.
+
+Replaces the old TPU-only ``_use_pallas`` boolean gate.  That gate meant the
+Pallas route was dead code everywhere except a real TPU — no CI job ever
+executed a kernel through the rule dispatch, so kernel regressions could only
+surface in production.  The three-way policy makes the route testable on any
+backend:
+
+* ``pallas``     — compiled Pallas kernels (TPU; elsewhere compilation fails,
+                   which is the caller's explicit choice to see).
+* ``jnp``        — the pure-jnp reference path in ``repro.core`` (the default
+                   off-TPU: interpret-mode Pallas is orders of magnitude
+                   slower than XLA, so it is never chosen implicitly).
+* ``interpret``  — Pallas kernels under ``interpret=True``: the same kernel
+                   bodies, executed by the Pallas interpreter on CPU.  Slow,
+                   but runs everywhere — the CI ``kernel-parity`` job uses it
+                   to assert every kernel against its jnp oracle.
+
+Selection has two inputs, resolved by :func:`resolve_kernel_mode`:
+
+1. the per-call/config request (``use_kernels`` on ``ServerConfig`` /
+   ``RuleOptions`` / the aggregate functions): ``False`` (no kernels),
+   ``True`` (kernels where profitable), or one of the mode strings above to
+   pin the route;
+2. the process-wide policy from ``$REPRO_KERNELS`` (``auto`` when unset),
+   consulted only for ``use_kernels=True``.
+
+``resolve_kernel_mode`` is a host-side function: call it BEFORE entering jit
+(e.g. when building ``RuleOptions``) or accept that the mode is frozen into
+the trace — the rules take the resolved mode as a static argument, so two
+calls with different resolved modes compile separately and never collide in
+the jit cache.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_KERNELS"
+MODES = ("pallas", "jnp", "interpret")
+
+
+def requested_policy() -> str:
+    """Process-wide kernel policy from ``$REPRO_KERNELS`` (default ``auto``)."""
+    val = os.environ.get(ENV_VAR, "auto").strip().lower()
+    if val not in ("auto",) + MODES:
+        raise ValueError(
+            f"{ENV_VAR}={val!r} invalid; expected one of {('auto',) + MODES}"
+        )
+    return val
+
+
+def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
+    """Resolve a ``use_kernels`` request to one of ``pallas``/``jnp``/``interpret``.
+
+    * ``False``/``None`` -> ``jnp`` (kernels not requested; env is ignored).
+    * ``True``  -> the ``$REPRO_KERNELS`` policy; ``auto`` picks ``pallas``
+      on TPU and ``jnp`` everywhere else (the old gate's behavior).
+    * a mode string -> itself (``"auto"`` re-resolves by backend).
+    """
+    if use_kernels is None or use_kernels is False:
+        return "jnp"
+    policy = use_kernels if isinstance(use_kernels, str) else requested_policy()
+    policy = policy.strip().lower()
+    if policy == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if policy not in MODES:
+        raise ValueError(
+            f"kernel mode {policy!r} invalid; expected one of {('auto',) + MODES}"
+        )
+    return policy
+
+
+def explicit_kernel_request(use_kernels: bool | str | None) -> str | None:
+    """The mode the caller *explicitly* named, or None for auto selection.
+
+    Explicit means: ``use_kernels`` is a mode string, or it is truthy while
+    ``$REPRO_KERNELS`` pins a concrete mode.  Rules without a kernel (e.g.
+    trimmed-mean) silently use the jnp reference under auto selection but
+    raise when a kernel route is explicitly demanded.
+    """
+    if isinstance(use_kernels, str) and use_kernels.strip().lower() != "auto":
+        return resolve_kernel_mode(use_kernels)
+    if use_kernels and requested_policy() != "auto":
+        return requested_policy()
+    return None

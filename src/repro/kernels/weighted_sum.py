@@ -4,6 +4,10 @@ The write path of AFA's eq. (3): a (1, K) x (K, BLOCK_D) matvec per tile,
 grid over d.  Exists mostly so the whole robust-aggregation pipeline
 (gram/cosine -> while-loop on scalars -> weighted sum) can run on-chip without
 bouncing the update matrix through HBM more than twice.
+
+Packed-operand contract (ops.py): d is the FULL packed model width padded to
+a BLOCK_D multiple; K is padded to the 8-row sublane tile with ZERO weights
+on the pad rows, so the matvec is exact and only d-columns need slicing.
 """
 
 from __future__ import annotations

@@ -87,6 +87,66 @@ def test_pairwise_from_gram_matches_direct():
     np.testing.assert_allclose(np.asarray(d2), ref, rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("K,d,block_k,block_d", [
+    (32, 700, 16, 256),
+    (70, 513, 16, 128),   # K and d both ragged vs the blocks: pad paths
+    (24, 2048, 8, 1024),
+])
+def test_gram_k_tiled_grid_matches_single_tile(K, d, block_k, block_d):
+    """The K-tiled (Ki, Kj, Db) grid — the packed-operand layout for stacks
+    too wide for one VMEM-resident (K, K) accumulator — must agree with the
+    single-tile kernel and the oracle."""
+    u = _mk(K, d, jnp.float32)
+    tiled = gram(u, block_k=block_k, block_d=block_d)
+    ref = gram_ref(u)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(ref), rtol=1e-4, atol=1e-3)
+    # vs the single-tile kernel: same math, different d-block accumulation
+    # order -> equal up to f32 summation noise, not bitwise
+    np.testing.assert_allclose(
+        np.asarray(tiled), np.asarray(gram(u)), rtol=5e-5, atol=1e-4
+    )
+
+
+def test_kernels_exact_under_row_padding():
+    """K not a multiple of the 8-row sublane tile: the wrappers zero-pad the
+    client axis (exact for dots/norms/zero-weighted sums) and slice back."""
+    for K in (3, 9, 100):
+        u = _mk(K, 260, jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(260,)).astype(np.float32))
+        c = jnp.asarray(RNG.uniform(0, 1, K).astype(np.float32))
+        assert cosine_sim(u, w).shape == (K,)
+        assert gram(u).shape == (K, K)
+        assert weighted_sum(c, u).shape == (260,)
+        np.testing.assert_allclose(
+            np.asarray(weighted_sum(c, u)), np.asarray(weighted_sum_ref(u, c)),
+            rtol=1e-5, atol=1e-4,
+        )
+
+
+# --------------------------- kernel policy ----------------------------------
+
+
+def test_env_policy_drives_default_interpret(monkeypatch):
+    """$REPRO_KERNELS=interpret must force the Pallas interpreter in the ops
+    wrappers' default resolution (the CI kernel-parity route), and the result
+    must still match the oracle."""
+    from repro.kernels.ops import _default_interpret
+
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    assert _default_interpret() is True
+    u = _mk(6, 130, jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(130,)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(cosine_sim(u, w, interpret=True)),
+        np.asarray(cosine_sim_ref(u, w)),
+        rtol=1e-5, atol=1e-5,
+    )
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert _default_interpret() is False
+    monkeypatch.delenv("REPRO_KERNELS")
+    assert _default_interpret() is (jax.default_backend() != "tpu")
+
+
 # ------------------------- hypothesis properties ---------------------------
 
 
