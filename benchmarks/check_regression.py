@@ -17,8 +17,13 @@ is to catch a layout/dispatch change that erases a speedup class (packed
 dropping to ~1x, fused collapsing toward batched), not to relitigate the
 third significant digit.
 
+Per-scenario thresholds: the ``kernel_*`` scenarios (fused screening kernel
+vs chained launches / jnp oracle) get a wider default tolerance — on CPU CI
+they time the Pallas *interpreter*, whose per-launch overhead is noisier
+than the compiled engines' round times — override with ``--kernel-tolerance``.
+
 Usage:  python benchmarks/check_regression.py CURRENT.json BASELINE.json
-            [--tolerance 0.25]
+            [--tolerance 0.25] [--kernel-tolerance 0.5]
 """
 
 from __future__ import annotations
@@ -26,6 +31,17 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+# scenario-name prefix -> CLI option that carries its tolerance; anything
+# unlisted uses --tolerance
+PREFIX_TOLERANCE_OPTS = {"kernel_": "kernel_tolerance"}
+
+
+def tolerance_for(name: str, args: argparse.Namespace) -> float:
+    for prefix, opt in PREFIX_TOLERANCE_OPTS.items():
+        if name.startswith(prefix):
+            return getattr(args, opt)
+    return args.tolerance
 
 
 def collect_speedups(doc: dict) -> dict[str, float]:
@@ -37,6 +53,9 @@ def collect_speedups(doc: dict) -> dict[str, float]:
         out[f"compaction_post_block/K{r['K']}"] = float(r["post_block_speedup"])
     for r in doc.get("packed", []):
         out[f"packed_agg/K{r['K']}/{r.get('rule', 'afa')}"] = float(r["agg_speedup"])
+    for r in doc.get("kernel", []):
+        out[f"kernel_fused_vs_chained/K{r['K']}"] = float(r["fused_vs_chained"])
+        out[f"kernel_fused_vs_jnp/K{r['K']}"] = float(r["fused_vs_jnp"])
     return out
 
 
@@ -46,6 +65,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("baseline", help="committed baseline BENCH json")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional speedup drop before failing")
+    ap.add_argument("--kernel-tolerance", type=float, default=0.5,
+                    help="tolerance for the kernel_* scenarios (interpreter "
+                         "timings on CPU CI are noisier)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -60,10 +82,11 @@ def main(argv: list[str] | None = None) -> int:
 
     failures = []
     for name in shared:
-        floor = base[name] * (1.0 - args.tolerance)
+        tol = tolerance_for(name, args)
+        floor = base[name] * (1.0 - tol)
         status = "OK" if cur[name] >= floor else "REGRESSED"
         print(f"{status:9s} {name}: current {cur[name]:.2f}x vs baseline "
-              f"{base[name]:.2f}x (floor {floor:.2f}x)")
+              f"{base[name]:.2f}x (floor {floor:.2f}x, tol {tol:.0%})")
         if cur[name] < floor:
             failures.append(name)
     for name in sorted(set(cur) - set(base)):
@@ -73,10 +96,10 @@ def main(argv: list[str] | None = None) -> int:
 
     if failures:
         print(f"\ncheck_regression: {len(failures)} scenario(s) regressed "
-              f">{args.tolerance:.0%} vs baseline: {failures}")
+              f"past their tolerance vs baseline: {failures}")
         return 1
     print(f"\ncheck_regression: {len(shared)} shared scenario(s) within "
-          f"{args.tolerance:.0%} of baseline")
+          f"tolerance of baseline")
     return 0
 
 

@@ -24,6 +24,14 @@ under ``agg_layout="packed"`` (pack once per round in the scan body) is
 BIT-IDENTICAL to ``agg_layout="tree"`` (pack inside the dispatch) — the
 packed threading must be a pure layout change.
 
+The ``kernel`` scenario measures the fused AFA screening kernel (ONE Pallas
+launch per aggregation: gram + VMEM-resident screening loop + weighted sum,
+``kernels/afa_screen.py``) against the chained per-op kernel launches and
+the jnp oracle at K in {50, 200, 512}, D = 2048.  It ASSERTS the launch
+counts by jaxpr inspection (fused = 1, chained >= 2, jnp = 0) and — on the
+interpret route — that the fused result is BIT-identical (f32) to the jnp
+gram reference.
+
 Emits ``BENCH_fused_engine.json`` at the repo root (machine-readable record
 for the acceptance gates: >= 2x fused-vs-batched at K = 50, >= 1.5x
 post-blocking compaction speedup at K = 200, and >= 1.3x packed-vs-leaf
@@ -262,6 +270,142 @@ def run_packed(tiny: bool = False) -> tuple[list[dict], list[dict]]:
     return rows, record
 
 
+# kernel-scenario geometry: the aggregation hot path alone, AFA gram variant
+# on a synthetic (K, D) stack with planted outliers so the screening loop
+# actually iterates.  Three routes: jnp oracle, chained kernels (PR-4:
+# separate gram + weighted-sum launches), fused mega-kernel (ONE launch).
+KERNEL_D = 2048
+KERNEL_ROUNDS = 8
+
+
+def _count_pallas_launches(fn, *args) -> int:
+    """Number of pallas_call eqns in fn's jaxpr, sub-jaxprs included."""
+    try:
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:  # older jax
+        from jax.core import ClosedJaxpr, Jaxpr
+    import jax
+
+    def subjaxprs(val):
+        if isinstance(val, ClosedJaxpr):
+            return [val.jaxpr]
+        if isinstance(val, Jaxpr):
+            return [val]
+        if isinstance(val, (list, tuple)):
+            return [j for v in val for j in subjaxprs(v)]
+        return []
+
+    def count(jx) -> int:
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for val in eqn.params.values():
+                n += sum(count(sub) for sub in subjaxprs(val))
+        return n
+
+    return count(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def run_kernel(tiny: bool = False) -> tuple[list[dict], list[dict]]:
+    """Fused-screening-kernel speedups: ONE Pallas launch per aggregation
+    (afa_screen) vs the chained per-op kernel launches vs the jnp oracle.
+
+    Also asserts the tentpole's structural claims: the fused route binds
+    EXACTLY one pallas_call in its jaxpr (the chained route >= 2, the jnp
+    route 0), and — on the interpret route — the fused aggregate / mask /
+    rounds / similarities are BIT-identical (f32) to the jnp gram reference.
+    On CPU CI the kernel mode is pinned to ``interpret`` (compiled Mosaic
+    needs a TPU), so the recorded speedups gate the interpreter route's
+    relative cost; on a real accelerator the same scenario records the
+    compiled launch wins.
+    """
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.core.afa import AFAConfig, afa_aggregate
+    from repro.kernels.policy import resolve_kernel_mode
+
+    mode = resolve_kernel_mode(True)
+    if mode == "jnp":  # off-accelerator auto: the interpreter IS the kernel route
+        mode = "interpret"
+    ks = [50] if tiny else [50, 200, 512]
+    rows, record = [], []
+    for K in ks:
+        rng = np.random.default_rng(K)
+        u = jnp.asarray(rng.normal(size=(K, KERNEL_D)).astype(np.float32))
+        u = u.at[: max(K // 10, 1)].multiply(25.0)  # outliers -> screening iterates
+        n_k = jnp.asarray(rng.integers(1, 50, size=K).astype(np.float32))
+        p_k = jnp.asarray(rng.uniform(0.2, 0.8, size=K).astype(np.float32))
+        cfgs = {
+            "jnp": AFAConfig(variant="gram", use_kernels=False,
+                             max_rounds=KERNEL_ROUNDS),
+            "chained": AFAConfig(variant="gram", use_kernels=mode,
+                                 kernel_launch="chained", max_rounds=KERNEL_ROUNDS),
+            "fused": AFAConfig(variant="gram", use_kernels=mode,
+                               kernel_launch="fused", max_rounds=KERNEL_ROUNDS),
+        }
+        res = {name: afa_aggregate(u, n_k, p_k, config=c)
+               for name, c in cfgs.items()}
+        if mode == "interpret":
+            # exact-shape one-pass kernel: bit-identical to the jnp oracle
+            np.testing.assert_array_equal(
+                np.asarray(res["fused"].aggregate), np.asarray(res["jnp"].aggregate),
+                err_msg=f"fused kernel not bit-identical to jnp oracle at K={K}")
+            np.testing.assert_array_equal(
+                np.asarray(res["fused"].good_mask), np.asarray(res["jnp"].good_mask))
+            np.testing.assert_array_equal(
+                np.asarray(res["fused"].similarities),
+                np.asarray(res["jnp"].similarities))
+            assert int(res["fused"].rounds) == int(res["jnp"].rounds)
+        launches = {
+            name: _count_pallas_launches(
+                lambda u_, n_, p_, c=c: afa_aggregate(u_, n_, p_, config=c),
+                u, n_k, p_k)
+            for name, c in cfgs.items()
+        }
+        assert launches["fused"] == 1, \
+            f"fused route must be ONE pallas launch, got {launches['fused']}"
+        assert launches["chained"] >= 2, launches
+        assert launches["jnp"] == 0, launches
+        times = {}
+        for name, c in cfgs.items():
+            t = float("inf")
+            for _ in range(REPEATS):
+                t = min(t, timeit(
+                    lambda c=c: afa_aggregate(u, n_k, p_k, config=c),
+                    warmup=1, iters=5))
+            times[name] = t
+        vs_chained = times["chained"] / max(times["fused"], 1e-9)
+        vs_jnp = times["jnp"] / max(times["fused"], 1e-9)
+        for name in ("jnp", "chained", "fused"):
+            rows.append({
+                "name": f"fused_engine/kernel/K{K}/{name}",
+                "us_per_call": round(times[name] * 1e6, 1),
+                "derived": f"launches={launches[name]}",
+            })
+        rows.append({
+            "name": f"fused_engine/kernel/K{K}/speedup",
+            "us_per_call": "",
+            "derived": f"fused={vs_chained:.2f}x_vs_chained_{vs_jnp:.2f}x_vs_jnp",
+        })
+        record.append({
+            "K": K,
+            "D": KERNEL_D,
+            "mode": mode,
+            "rounds_run": int(res["fused"].rounds),
+            "launches_fused": launches["fused"],
+            "launches_chained": launches["chained"],
+            "jnp_s": round(times["jnp"], 6),
+            "chained_s": round(times["chained"], 6),
+            "fused_s": round(times["fused"], 6),
+            "fused_vs_chained": round(vs_chained, 2),
+            "fused_vs_jnp": round(vs_jnp, 2),
+            "bit_exact": mode == "interpret",
+        })
+    return rows, record
+
+
 def run(quick: bool = False, tiny: bool = False) -> list[dict]:
     if tiny:
         ks, rounds = [10], 8
@@ -296,6 +440,8 @@ def run(quick: bool = False, tiny: bool = False) -> list[dict]:
     rows.extend(compact_rows)
     packed_rows, packed_record = run_packed(tiny=tiny)
     rows.extend(packed_rows)
+    kernel_rows, kernel_record = run_kernel(tiny=tiny)
+    rows.extend(kernel_rows)
     with open(OUT_JSON, "w") as f:
         json.dump({
             "workload": {
@@ -306,6 +452,7 @@ def run(quick: bool = False, tiny: bool = False) -> list[dict]:
             "results": record,
             "compaction": compact_record,
             "packed": packed_record,
+            "kernel": kernel_record,
         }, f, indent=2)
     return rows
 

@@ -23,6 +23,11 @@ Two algorithmic variants (both forms):
   O(K²) on scalars:   ⟨w_agg, u_k⟩ = (G c)_k,  ‖w_agg‖² = cᵀGc,
   ‖u_k‖² = diag(G).  The full update set is touched exactly twice (Gram +
   final weighted sum) regardless of how many outlier-removal rounds run.
+  Under a kernel mode this variant defaults to the FUSED screening kernel
+  (``kernels/afa_screen.py``): the whole algorithm — Gram, VMEM-resident
+  screening loop, final weighted sum — is ONE Pallas launch
+  (``AFAConfig.kernel_launch="fused"``; ``"chained"`` keeps the per-op
+  kernel launches as the benchmark baseline).
 
 Direction convention follows the paper's algorithm box (not the prose, which
 has a sign typo): when mean ≥ median the *high*-similarity tail is removed
@@ -40,9 +45,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stats import masked_mean, masked_median, masked_std
+from repro.kernels.policy import resolve_kernel_mode
 from repro.utils.trees import tree_dot
 
 EPS = 1e-12
+
+# Lazy module-level accessor for the kernel ops (satisfies the one-time
+# import contract: resolve_kernel_mode is imported at module scope above —
+# policy has no core dependency — while the kernel package itself, which
+# pulls in every Pallas module, loads once on first kernel-mode use instead
+# of per call site).
+_KERNEL_OPS = None
+
+
+def _kernel_ops():
+    global _KERNEL_OPS
+    if _KERNEL_OPS is None:
+        from repro import kernels
+
+        _KERNEL_OPS = kernels
+    return _KERNEL_OPS
 
 
 class AFAConfig(NamedTuple):
@@ -51,12 +73,22 @@ class AFAConfig(NamedTuple):
     max_rounds: int = 8       # fixed upper bound for lax.while_loop safety
     ddof: int = 0
     variant: str = "iterative"  # "iterative" | "gram"
-    # Route the hot ops (gram / cosine-sim / weighted-sum) through the Pallas
-    # kernels: bool for auto selection via $REPRO_KERNELS (pallas on TPU, jnp
-    # elsewhere) or a pinned mode string "pallas" / "jnp" / "interpret" (see
+    # Route the hot ops through the Pallas kernels: bool for auto selection
+    # via $REPRO_KERNELS (pallas on TPU, pallas-gpu on GPU, jnp elsewhere) or
+    # a pinned mode string "pallas" / "pallas-gpu" / "jnp" / "interpret" (see
     # repro.kernels.policy).  Matrix form only — the tree form is already
-    # XLA-fused.
+    # XLA-fused.  With variant="gram" a kernel mode selects the FUSED
+    # screening kernel by default (kernel_launch="fused"): Algorithm 1 runs
+    # as ONE Pallas launch — gram, VMEM-resident screening loop, and final
+    # weighted sum — emitting (aggregate, good_mask, rounds, similarities)
+    # without relaunches or HBM re-reads of the (K, d) operand; under
+    # interpret it is bit-identical (f32) to the jnp gram reference.
     use_kernels: bool | str = False
+    # "fused" (one afa_screen launch, gram variant only) | "chained" (the
+    # PR-4 route: separate gram / weighted-sum kernel launches around an
+    # XLA-composed while loop — kept as the benchmark baseline the fused
+    # launch is gated against).
+    kernel_launch: str = "fused"
 
 
 class AFAResult(NamedTuple):
@@ -104,17 +136,30 @@ def afa_aggregate(
     K = updates.shape[0]
     mask0 = jnp.ones((K,), bool) if mask0 is None else mask0
     upd32 = updates.astype(jnp.float32)
-    row_norms = jnp.linalg.norm(upd32, axis=1)
-    from repro.kernels.policy import resolve_kernel_mode
-
     mode = resolve_kernel_mode(config.use_kernels)
     interp = mode == "interpret"
 
+    if config.variant == "gram" and mode != "jnp" and config.kernel_launch == "fused":
+        # the fused route: Algorithm 1 as ONE Pallas launch (gram +
+        # VMEM-resident screening loop + weighted sum, see kernels/afa_screen)
+        agg, good, rounds, sims = _kernel_ops().afa_screen(
+            upd32,
+            p_k.astype(jnp.float32) * n_k.astype(jnp.float32),
+            mask0,
+            xi0=config.xi0, delta_xi=config.delta_xi,
+            max_rounds=config.max_rounds, ddof=config.ddof,
+            interpret=interp,
+        )
+        return AFAResult(
+            aggregate=agg.astype(updates.dtype), good_mask=good,
+            rounds=rounds, similarities=sims,
+        )
+
+    row_norms = jnp.linalg.norm(upd32, axis=1)
+
     if config.variant == "gram":
         if mode != "jnp":
-            from repro.kernels import gram as gram_kernel
-
-            gram = gram_kernel(upd32, interpret=interp)
+            gram = _kernel_ops().gram(upd32, interpret=interp)
         else:
             gram = upd32 @ upd32.T  # (K, K) — single pass over d
 
@@ -124,11 +169,11 @@ def afa_aggregate(
             return gc / (jnp.maximum(row_norms, EPS) * agg_norm)
 
     elif mode != "jnp":
-        from repro.kernels import cosine_sim, weighted_sum
 
         def sims(c):
-            return cosine_sim(upd32, weighted_sum(c, upd32, interpret=interp),
-                              interpret=interp)
+            k = _kernel_ops()
+            return k.cosine_sim(upd32, k.weighted_sum(c, upd32, interpret=interp),
+                                interpret=interp)
 
     else:
 
@@ -163,9 +208,7 @@ def afa_aggregate(
     )
     w = _weights(mask, p_k, n_k)
     if mode != "jnp":
-        from repro.kernels import weighted_sum
-
-        agg = weighted_sum(w, upd32, interpret=interp).astype(updates.dtype)
+        agg = _kernel_ops().weighted_sum(w, upd32, interpret=interp).astype(updates.dtype)
     else:
         agg = (w @ upd32).astype(updates.dtype)
     return AFAResult(aggregate=agg, good_mask=mask, rounds=rounds, similarities=s)

@@ -34,18 +34,17 @@ reference the packed path is benchmarked against and as the layout for
 sharded trees that must not be concatenated.
 
 ``use_kernels`` policy, uniform across ALL rules, resolved by
-``repro.kernels.policy.resolve_kernel_mode`` into one of three modes:
-``pallas`` (compiled kernels — TPU), ``jnp`` (this file's reference path),
-``interpret`` (the same Pallas kernel bodies under the interpreter — any
-backend; the CI kernel-parity route).  ``use_kernels=True`` consults
-``$REPRO_KERNELS`` (auto -> pallas on TPU, jnp elsewhere); a mode string
-pins the route.  Rules whose hot op has no kernel (trimmed-mean's sort,
-geomed/centered-clip's iterations) use the reference path under auto
-selection, and trimmed-mean raises on an explicit kernel demand.  comed's
-compare-count kernel computes an *unmasked* median, so its kernel route
-engages only where the mask is host-concrete (the matrix path, rows
-pre-selected); inside jit-traced tree dispatch comed uses the XLA sort
-reference.
+``repro.kernels.policy.resolve_kernel_mode`` into one of four modes:
+``pallas`` (compiled kernels — TPU), ``pallas-gpu`` (compiled via the
+Triton lowering), ``jnp`` (this file's reference path), ``interpret`` (the
+same Pallas kernel bodies under the interpreter — any backend; the CI
+kernel-parity route).  ``use_kernels=True`` consults ``$REPRO_KERNELS``
+(auto -> pallas on TPU, pallas-gpu on GPU, jnp elsewhere); a mode string
+pins the route.  Rules whose hot op has no kernel (geomed/centered-clip's
+iterations) use the reference path under auto selection and raise on an
+explicit kernel demand.  comed and trimmed-mean both route through masked
+compare-count rank-selection kernels — mask-aware, so they engage under
+jit-traced masks (tree dispatch included) with no host row-selection.
 """
 
 from __future__ import annotations
@@ -153,19 +152,22 @@ def comed_aggregate(updates, n_k=None, p_k=None, mask=None, *, use_kernels: bool
     """Coordinate-wise median across clients (masked rows pushed to ±inf in
     balanced pairs so they never shift the median).
 
-    The Pallas compare-count kernel computes an *unmasked* K-row median, so
-    the kernel route applies only when no rows are masked out; the registry
-    adapter row-selects on the host first when the mask is concrete.
+    The Pallas compare-count kernel ranks each live row against the live
+    subset only, so the kernel route is mask-aware — it engages for traced
+    masks too (tree dispatch) with no host row-selection round-trip.
     """
     K, _ = updates.shape
     mode = _kernel_mode(use_kernels)
-    if mask is None and mode != "jnp":
+    if mode != "jnp":
         from repro.kernels import coord_median
 
-        return AggResult(
-            coord_median(updates, interpret=(mode == "interpret")).astype(updates.dtype),
-            jnp.ones((K,), bool),
+        m = jnp.ones((K,), bool) if mask is None else mask
+        med = coord_median(
+            updates.astype(jnp.float32),
+            None if mask is None else m,
+            interpret=(mode == "interpret"),
         )
+        return AggResult(med.astype(updates.dtype), m)
     mask = jnp.ones((K,), bool) if mask is None else mask
     u = updates.astype(jnp.float32)
     m = jnp.sum(mask)
@@ -189,29 +191,27 @@ def trimmed_mean_aggregate(
 ) -> AggResult:
     """Coordinate-wise mean after dropping ``trim`` extremes from both ends.
 
-    ``use_kernels`` honors the kernel policy, but no Pallas kernel covers the
-    per-coordinate sort: under *auto* selection (``False``, or ``True`` with
-    ``$REPRO_KERNELS`` unset/``auto``) the flag is accepted for registry
-    uniformity and this jnp reference runs; an *explicit* kernel demand
-    (``use_kernels="pallas"``/``"interpret"``, or the flag set while
-    ``$REPRO_KERNELS`` pins a kernel mode) raises ``NotImplementedError``
-    instead of silently ignoring the request.
+    Kernel modes route through the masked compare-count rank-trim kernel
+    (``kernels/trimmed_mean.py``) — the sort is replaced by ranking each live
+    row against the live subset, which keeps exactly the values the sort
+    would keep, so the result is value-identical up to f32 summation order.
 
     When the live count ``m <= 2 * trim`` the trim window is empty — the rule
     degrades to the masked coordinate-wise mean instead of silently returning
     a zero aggregate (which would reset the model mid-run once blocking
-    shrinks participation below the window)."""
-    from repro.kernels.policy import explicit_kernel_request
-
-    explicit = explicit_kernel_request(use_kernels)
-    if explicit in ("pallas", "interpret"):
-        raise NotImplementedError(
-            "trimmed_mean has no Pallas kernel (the hot op is a per-coordinate "
-            f"sort); explicit kernel mode {explicit!r} cannot be honored — use "
-            "use_kernels=False/True (auto) for the jnp reference"
-        )
+    shrinks participation below the window); the kernel mirrors this
+    fallback."""
     K, _ = updates.shape
     mask = jnp.ones((K,), bool) if mask is None else mask
+    mode = _kernel_mode(use_kernels)
+    if mode != "jnp":
+        from repro.kernels import trimmed_mean
+
+        out = trimmed_mean(
+            updates.astype(jnp.float32), mask, trim=trim,
+            interpret=(mode == "interpret"),
+        )
+        return AggResult(out.astype(updates.dtype), mask)
     u32 = updates.astype(jnp.float32)
     srt = jnp.sort(jnp.where(mask[:, None], u32, jnp.inf), axis=0)
     m = jnp.sum(mask)
@@ -239,7 +239,9 @@ def bulyan_aggregate(
         updates, mask=mask, num_byzantine=num_byzantine, num_selected=theta,
         use_kernels=use_kernels,
     ).good_mask
-    med = comed_aggregate(updates, mask=sel).aggregate.astype(jnp.float32)
+    med = comed_aggregate(
+        updates, mask=sel, use_kernels=use_kernels
+    ).aggregate.astype(jnp.float32)
     dist = jnp.where(sel[:, None], jnp.abs(updates.astype(jnp.float32) - med[None]), jnp.inf)
     beta = max(theta - 2 * num_byzantine, 1)
     order = jnp.argsort(dist, axis=0)
@@ -284,9 +286,9 @@ class RuleOptions(NamedTuple):
     participation count (it is a static shape-like parameter).
 
     ``use_kernels`` may be a bool (auto selection via ``$REPRO_KERNELS``) or
-    a pinned mode string ``"pallas"``/``"jnp"``/``"interpret"``; resolve on
-    the host (``make_rule_options`` does) so the resolved mode — not the
-    ambient env var — keys the jit cache."""
+    a pinned mode string ``"pallas"``/``"pallas-gpu"``/``"jnp"``/
+    ``"interpret"``; resolve on the host (``make_rule_options`` does) so the
+    resolved mode — not the ambient env var — keys the jit cache."""
 
     num_byzantine: int = 3
     trim: int = 3
@@ -417,22 +419,8 @@ def _mkrum_rule(u, n_k, p_k, mask, o: RuleOptions):
 
 
 def _comed_rule(u, n_k, p_k, mask, o: RuleOptions):
-    mode = _kernel_mode(o.use_kernels)
-    if (
-        mode != "jnp"
-        and mask is not None
-        and not isinstance(mask, jax.core.Tracer)
-    ):
-        # host path with a concrete mask: row-select, then the Pallas kernel
-        import numpy as np
-
-        from repro.kernels import coord_median
-
-        sel = jnp.asarray(np.nonzero(np.asarray(mask))[0])
-        return AggResult(
-            coord_median(u[sel], interpret=(mode == "interpret")).astype(u.dtype),
-            mask,
-        )
+    # the kernel is mask-aware (rank among live rows), so one route covers
+    # concrete and traced masks alike — no host row-selection special case
     return comed_aggregate(u, mask=mask, use_kernels=o.use_kernels)
 
 

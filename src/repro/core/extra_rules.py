@@ -103,10 +103,9 @@ def zeno_aggregate(
 
 # Registry hookup.  No Pallas kernel covers the Weiszfeld / clipping
 # iterations, so both rules run the jnp reference under every kernel policy
-# mode (they never consume ``opts.use_kernels`` — unlike trimmed-mean they
-# predate the registry's uniformity contract and have no kernel route to
-# honor or refuse).  Both participate in the packed (K, D) dispatch like any
-# other matrix rule.  Zeno stays OUT of the registry: it needs a server-side
+# mode (they never consume ``opts.use_kernels`` — now the registry's ONLY
+# kernel-less rules, since trimmed-mean gained its masked rank-trim kernel).
+# Both participate in the packed (K, D) dispatch like any other matrix rule.  Zeno stays OUT of the registry: it needs a server-side
 # validation loss_fn + w_prev, which the uniform dispatch signature (and the
 # paper's trust model) does not carry.
 register_rule("geomed", lambda u, n, p, m, o: geometric_median_aggregate(u, mask=m))

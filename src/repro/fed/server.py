@@ -63,17 +63,17 @@ class ServerConfig:
     # baselines
     num_byzantine: int = 3       # f for mkrum/bulyan
     trim: int = 3                # for trimmed_mean
-    # Route every rule's hot ops (gram / cosine-sim / weighted-sum /
-    # coord-median) through the Pallas kernels.  A bool selects automatically
-    # via $REPRO_KERNELS (auto -> pallas on TPU, the jnp reference elsewhere —
-    # interpret-mode Pallas is far slower than XLA); a mode string "pallas" /
-    # "jnp" / "interpret" pins the route (repro.kernels.policy).
+    # Route every rule's hot ops (the fused AFA screen, gram / cosine-sim /
+    # weighted-sum, coord-median, trimmed-mean) through the Pallas kernels.
+    # A bool selects automatically via $REPRO_KERNELS (auto -> pallas on TPU,
+    # pallas-gpu on GPU, the jnp reference elsewhere — interpret-mode Pallas
+    # is far slower than XLA); a mode string "pallas" / "pallas-gpu" / "jnp" /
+    # "interpret" pins the route (repro.kernels.policy).
     # ``make_rule_options`` resolves the request on the host, so the resolved
-    # mode — not the ambient env var — keys the jit cache.  One scoped
-    # exception: comed's compare-count kernel computes an *unmasked* median,
-    # so its kernel route engages on the matrix path (host-concrete mask,
-    # rows pre-selected); the in-jit tree dispatch uses the XLA sort
-    # reference (see DESIGN.md §3).
+    # mode — not the ambient env var — keys the jit cache.  The comed and
+    # trimmed-mean kernels are mask-aware (compare-count rank selection), so
+    # every kernel route works in-jit with traced masks; only geomed /
+    # centered-clip stay kernel-less (see DESIGN.md §3).
     use_kernels: bool | str = False
     # Aggregation layout of the tree dispatch (DESIGN.md §3): "packed" packs
     # the stacked proposal pytree into one contiguous (K, D) buffer and runs
@@ -219,9 +219,9 @@ def server_step(
     ``(K, D)`` matrix (``layout="matrix"``, and its alias ``"packed"`` for a
     buffer the caller packed with ``utils/trees.pack_stack`` — the fused
     round body packs once per round and unpacks the aggregate itself).  Pure
-    in ``state`` — callable eagerly by :class:`FedServer` (where ``mask0`` is
-    host-concrete, preserving e.g. comed's kernel row-selection) or traced
-    inside the fused ``lax.scan``.
+    in ``state`` — callable eagerly by :class:`FedServer` or traced inside
+    the fused ``lax.scan`` (every kernel route is mask-aware, so tracing
+    ``mask0`` costs nothing).
     """
     if layout in ("matrix", "packed"):
         res = dispatch_rule(

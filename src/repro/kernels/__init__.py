@@ -5,19 +5,23 @@ Each kernel module holds the ``pl.pallas_call`` + ``BlockSpec`` tiling;
 """
 
 from repro.kernels.ops import (
+    afa_screen,
     coord_median,
     cosine_sim,
     flash_attention,
     gram,
     pairwise_sq_dists_from_gram,
+    trimmed_mean,
     weighted_sum,
 )
 
 __all__ = [
+    "afa_screen",
     "cosine_sim",
     "flash_attention",
     "gram",
     "coord_median",
+    "trimmed_mean",
     "weighted_sum",
     "pairwise_sq_dists_from_gram",
 ]

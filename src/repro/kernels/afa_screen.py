@@ -1,0 +1,279 @@
+"""Fused AFA screening mega-kernel: Algorithm 1 in ONE Pallas launch.
+
+The chained kernel route (PR 4) runs AFA's gram variant as a sequence of
+launches — gram kernel, host-composed while-loop on scalars, weighted-sum
+kernel — bouncing control back to XLA between each.  This kernel fuses the
+*entire* screening loop into a single ``pallas_call``:
+
+1. **Gram pass** — accumulate ``G = U U^T`` (and the row norms ``|u_k|^2``)
+   from ``(K, BLOCK_D)`` tiles of the packed update matrix, exactly the
+   K-resident layout of ``kernels/gram.py``.
+2. **Screening** — with ``G`` VMEM-resident, run the full
+   ``lax.while_loop`` of Algorithm 1 on-chip: weights from the masked
+   reputation vector, cosine similarities via ``G c`` (O(K²), no HBM), the
+   masked mean / median / std tail test, mask update, up to ``max_rounds``
+   repetitions.  The ``(K, D)`` operand is never re-read.
+3. **Aggregate pass** — stream the update tiles once more for the final
+   reputation-weighted sum ``w @ U``.
+
+and emits ``(aggregate, good_mask, rounds, similarities)`` from the one
+launch.
+
+Two launch geometries, selected by ``ops.afa_screen``:
+
+* **one-pass** (``block_d=None``): the whole ``(K, D)`` operand is a single
+  resident tile; gram, screening, and aggregate all happen in one grid step.
+  This is the geometry for the interpret route (no tiling constraints → the
+  kernel runs on the EXACT unpadded shapes and is BIT-identical (f32) to
+  ``afa_aggregate(variant="gram", use_kernels=False)`` — asserted by the
+  parity suite) and for ``pallas-gpu`` (no cross-step accumulation, so the
+  parallel CUDA grid is safe).
+* **two-pass** (``block_d=BD``): grid ``(2, D/BD)`` with the d axis
+  minor-most.  Pass 0 accumulates gram + norms tile by tile and runs the
+  screening at its last step; pass 1 emits the aggregate tiles.  ``G``, the
+  norms, and the final weights live in constant-index output blocks, which
+  TPU's sequential grid keeps resident across all iterations.  Requires the
+  sequential-grid guarantee — TPU / interpret only.
+
+Bitwise contract (the parity suite's strongest assertion): every float op
+below mirrors the jnp reference in ``core/afa.py`` + ``core/stats.py`` —
+same primitives, same operand order, same EPS clamps.  The only intentional
+deviation is the masked median: ``jnp.sort`` has no Mosaic lowering, so it
+is computed by compare-count rank selection (the ``coord_median`` idiom).
+That selects the *same two order statistics* the sort would (ties broken by
+index pick equal values), so the result is value-identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12  # must match core/afa.py
+
+
+def _masked_mean(x, mask):
+    """Mirror of core.stats.masked_mean (same ops, same order)."""
+    m = jnp.sum(mask)
+    return jnp.where(m > 0, jnp.sum(jnp.where(mask, x, 0.0)) / jnp.maximum(m, 1), 0.0)
+
+
+def _masked_std(x, mask, ddof):
+    """Mirror of core.stats.masked_std."""
+    m = jnp.sum(mask)
+    mu = _masked_mean(x, mask)
+    var = jnp.sum(jnp.where(mask, (x - mu) ** 2, 0.0)) / jnp.maximum(m - ddof, 1)
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def _masked_median_cc(x, mask):
+    """core.stats.masked_median by compare-count rank selection.
+
+    ``jnp.sort`` has no Mosaic lowering; ranking each live element against
+    the live set (ties broken by index → a strict total order) and summing
+    the one-hot selections of ranks ``(m-1)//2`` and ``m//2`` picks the same
+    two order-statistic VALUES the sort-based reference picks, so the
+    average is value-identical (O(K²) compares — VPU change for K scalars).
+    """
+    K = x.shape[0]
+    m = jnp.sum(mask)
+    live = mask[None, :]
+    lt = (x[None, :] < x[:, None]) & live
+    ii = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    eq = (x[None, :] == x[:, None]) & (ii > kk) & live
+    rank = jnp.sum(lt.astype(jnp.int32) + eq.astype(jnp.int32), axis=1)
+    lo = jnp.maximum((m - 1) // 2, 0)
+    hi = jnp.maximum(m // 2, 0)
+    v_lo = jnp.sum(jnp.where(mask & (rank == lo), x, 0.0))
+    v_hi = jnp.sum(jnp.where(mask & (rank == hi), x, 0.0))
+    return jnp.where(m > 0, 0.5 * (v_lo + v_hi), 0.0)
+
+
+def _screen(gram, unorm2, pn, mask0, *, xi0, delta_xi, max_rounds, ddof):
+    """Algorithm 1's screening loop on a resident Gram matrix.
+
+    Mirror of the ``variant="gram"`` while-loop in ``core/afa.py`` — any
+    change there must land here too (the parity suite asserts bitwise
+    equality on the interpret route).  Returns ``(weights, mask, rounds,
+    sims)`` with ``weights`` the final normalized reputation weights.
+    """
+    K = pn.shape[0]
+    row_norms = jnp.sqrt(unorm2)  # == jnp.linalg.norm(u, axis=1) bitwise
+
+    def weights(m):
+        c = jnp.where(m, pn, 0.0)
+        return c / jnp.maximum(jnp.sum(c), EPS)
+
+    def sims(c):
+        gc = gram @ c
+        agg_norm = jnp.sqrt(jnp.maximum(c @ gc, EPS))
+        return gc / (jnp.maximum(row_norms, EPS) * agg_norm)
+
+    def mark_bad(s, m, xi):
+        mu_hat = _masked_mean(s, m)
+        mu_bar = _masked_median_cc(s, m)
+        sigma = _masked_std(s, m, ddof)
+        low_tail = m & (s < mu_bar - xi * sigma)
+        high_tail = m & (s > mu_bar + xi * sigma)
+        bad = jnp.where(mu_hat < mu_bar, low_tail, high_tail)
+        keep_floor = jnp.sum(m & ~bad) >= 2
+        return jnp.where(keep_floor, bad, jnp.zeros_like(bad))
+
+    def cond(state):
+        m, xi, changed, rounds, _ = state
+        return changed & (rounds < max_rounds)
+
+    def body(state):
+        m, xi, _, rounds, _ = state
+        s = sims(weights(m))
+        bad = mark_bad(s, m, xi)
+        return (m & ~bad, xi + delta_xi, jnp.any(bad), rounds + 1, s)
+
+    s0 = (
+        sims(weights(mask0)) if max_rounds == 0
+        else jnp.zeros((K,), jnp.float32)
+    )
+    mask, _, _, rounds, s = jax.lax.while_loop(
+        cond, body,
+        (mask0, jnp.float32(xi0), jnp.bool_(True), jnp.int32(0), s0),
+    )
+    return weights(mask), mask, rounds, s
+
+
+def _kernel_onepass(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
+                    sims_ref, *, xi0, delta_xi, max_rounds, ddof):
+    """Single grid step: gram + screening + aggregate on one resident tile."""
+    u = u_ref[...].astype(jnp.float32)
+    gram = jax.lax.dot_general(
+        u, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    unorm2 = jnp.sum(u * u, axis=1)
+    w, mask, rounds, s = _screen(
+        gram, unorm2, pn_ref[0, :], mask_ref[0, :] != 0,
+        xi0=xi0, delta_xi=delta_xi, max_rounds=max_rounds, ddof=ddof,
+    )
+    agg_ref[...] = (w @ u)[None, :]
+    good_ref[...] = mask.astype(jnp.int32)[None, :]
+    rounds_ref[...] = rounds[None, None]
+    sims_ref[...] = s[None, :]
+
+
+def _kernel_twopass(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
+                    sims_ref, g_ref, un_ref, w_ref, *, nb, xi0, delta_xi,
+                    max_rounds, ddof):
+    """Grid (2, nb): pass 0 accumulates gram/norms (+screens at its last
+    step), pass 1 emits aggregate tiles.  The cross-step state (``g_ref``,
+    ``un_ref``, ``w_ref``) lives in constant-index output blocks that the
+    sequential TPU grid keeps resident for the whole launch."""
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+
+    @pl.when((p == 0) & (b == 0))
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        un_ref[...] = jnp.zeros_like(un_ref)
+
+    @pl.when(p == 0)
+    def _accumulate():
+        u = u_ref[...].astype(jnp.float32)
+        g_ref[...] += jax.lax.dot_general(
+            u, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        un_ref[...] += jnp.sum(u * u, axis=1)[None, :]
+
+    @pl.when((p == 0) & (b == nb - 1))
+    def _screen_resident():
+        w, mask, rounds, s = _screen(
+            g_ref[...], un_ref[0, :], pn_ref[0, :], mask_ref[0, :] != 0,
+            xi0=xi0, delta_xi=delta_xi, max_rounds=max_rounds, ddof=ddof,
+        )
+        w_ref[...] = w[None, :]
+        good_ref[...] = mask.astype(jnp.int32)[None, :]
+        rounds_ref[...] = rounds[None, None]
+        sims_ref[...] = s[None, :]
+
+    @pl.when(p == 1)
+    def _aggregate():
+        u = u_ref[...].astype(jnp.float32)
+        agg_ref[...] = jax.lax.dot_general(
+            w_ref[...], u, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def afa_screen_call(
+    updates: jnp.ndarray,   # (K, d) — padded by ops.py for compiled modes
+    pn: jnp.ndarray,        # (K,) f32 — reputation * data count (p_k * n_k)
+    mask0: jnp.ndarray,     # (K,) int32 — initial participation (0/1)
+    *,
+    xi0: float,
+    delta_xi: float,
+    max_rounds: int,
+    ddof: int = 0,
+    block_d: int | None = None,
+    interpret: bool = True,
+):
+    """One Pallas launch -> ``(aggregate (d,), good_mask (K,) i32, rounds
+    scalar i32, sims (K,))``.  ``block_d=None`` selects the one-pass
+    geometry; an explicit block selects the two-pass d-tiled grid (d must be
+    a block multiple; sequential-grid backends only)."""
+    K, d = updates.shape
+    screen_kw = dict(xi0=xi0, delta_xi=delta_xi, max_rounds=max_rounds, ddof=ddof)
+    out_shapes = (
+        jax.ShapeDtypeStruct((1, d), jnp.float32),   # aggregate
+        jax.ShapeDtypeStruct((1, K), jnp.int32),     # good_mask
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),     # rounds
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # sims
+    )
+    if block_d is None or block_d >= d:
+        agg, good, rounds, sims = pl.pallas_call(
+            functools.partial(_kernel_onepass, **screen_kw),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((K, d), lambda i: (0, 0)),
+                pl.BlockSpec((1, K), lambda i: (0, 0)),
+                pl.BlockSpec((1, K), lambda i: (0, 0)),
+            ],
+            out_specs=tuple(
+                pl.BlockSpec(s.shape, lambda i: (0, 0)) for s in out_shapes
+            ),
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(updates, pn[None, :], mask0[None, :])
+        return agg[0], good[0], rounds[0, 0], sims[0]
+
+    assert d % block_d == 0, (d, block_d)
+    nb = d // block_d
+    resident_shapes = (
+        jax.ShapeDtypeStruct((K, K), jnp.float32),   # gram
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # unorm2
+        jax.ShapeDtypeStruct((1, K), jnp.float32),   # final weights
+    )
+    agg, good, rounds, sims, _, _, _ = pl.pallas_call(
+        functools.partial(_kernel_twopass, nb=nb, **screen_kw),
+        grid=(2, nb),
+        in_specs=[
+            pl.BlockSpec((K, block_d), lambda p, b: (0, b)),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+        ],
+        out_specs=(
+            # pass 0 parks the aggregate window on block 0 (nothing is
+            # written there); pass 1 revisits block 0 first, so every block
+            # is flushed exactly once, after its pass-1 write
+            pl.BlockSpec((1, block_d), lambda p, b: (0, jnp.where(p == 0, 0, b))),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, 1), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+            pl.BlockSpec((K, K), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, K), lambda p, b: (0, 0)),
+        ),
+        out_shape=out_shapes + resident_shapes,
+        interpret=interpret,
+    )(updates, pn[None, :], mask0[None, :])
+    return agg[0], good[0], rounds[0, 0], sims[0]

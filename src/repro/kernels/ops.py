@@ -12,8 +12,16 @@ arbitrary K and full model D, so each wrapper
 * picks the D-block (and for gram the K-block) under a VMEM budget, and
 * resolves the interpret switch from the kernel policy
   (``repro.kernels.policy``): ``$REPRO_KERNELS=interpret`` forces the Pallas
-  interpreter (the CI ``kernel-parity`` route), ``pallas`` forces compiled
-  kernels, ``auto``/``jnp`` interprets everywhere except a real TPU backend.
+  interpreter (the CI ``kernel-parity`` route), ``pallas``/``pallas-gpu``
+  force compiled kernels, ``auto``/``jnp`` interprets everywhere except a
+  real accelerator backend.
+
+Geometry is backend-aware where it matters: the fused AFA screening kernel
+uses its one-pass launch (whole operand resident, no cross-step state) under
+the interpreter — where it runs on the EXACT unpadded shapes and is
+bit-identical to the jnp reference — and on GPU, whose Triton grid is
+parallel; the two-pass d-tiled grid with resident accumulator blocks is
+reserved for backends with sequential grids (TPU).
 """
 
 from __future__ import annotations
@@ -23,11 +31,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import afa_screen as _as
 from repro.kernels import coord_median as _cm
 from repro.kernels import cosine_sim as _cs
 from repro.kernels import gram as _gr
+from repro.kernels import trimmed_mean as _tm
 from repro.kernels import weighted_sum as _ws
-from repro.kernels.policy import requested_policy
+from repro.kernels.policy import COMPILED_MODES, requested_policy
 
 EPS = 1e-12
 VMEM_BUDGET = 8 * 1024 * 1024  # bytes we allow a block working set to claim
@@ -42,9 +52,9 @@ def _default_interpret() -> bool:
     policy = requested_policy()
     if policy == "interpret":
         return True
-    if policy == "pallas":
+    if policy in COMPILED_MODES:
         return False
-    return not _on_tpu()
+    return jax.default_backend() not in ("tpu", "gpu")
 
 
 def _pad_d(x: jnp.ndarray, block_d: int) -> jnp.ndarray:
@@ -123,13 +133,20 @@ def _gram_jit(updates, *, block_d: int | None, block_k: int | None, interpret: b
     return g[:K, :K]
 
 
-def coord_median(updates, *, block_d: int | None = None, interpret: bool | None = None):
-    """(K, d) -> (d,) coordinate-wise median (f32).
+def coord_median(updates, mask=None, *, block_d: int | None = None,
+                 interpret: bool | None = None):
+    """(K, d) [+ (K,) mask] -> (d,) coordinate-wise median (f32).
 
     K stays exact (no row padding — a zero pad row would shift the median);
-    the compare cube K*K*block_d bounds the D-block instead."""
+    the compare cube K*K*block_d bounds the D-block instead.  With a mask
+    (bool/int, traced or concrete) the kernel ranks among live rows only, so
+    blocked clients never shift the median and no host row-selection is
+    needed."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _coord_median_jit(updates, block_d=block_d, interpret=interpret)
+    if mask is None:
+        return _coord_median_jit(updates, block_d=block_d, interpret=interpret)
+    return _coord_median_masked_jit(updates, mask, block_d=block_d,
+                                    interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -138,6 +155,88 @@ def _coord_median_jit(updates, *, block_d: int | None, interpret: bool):
     block_d = block_d or _pick_block_d(d, K * K * 4, 512)
     u = _pad_d(updates, block_d)
     return _cm.coord_median(u, block_d=block_d, interpret=interpret)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _coord_median_masked_jit(updates, mask, *, block_d: int | None, interpret: bool):
+    K, d = updates.shape
+    block_d = block_d or _pick_block_d(d, K * K * 4, 512)
+    u = _pad_d(updates, block_d)
+    m = mask.astype(jnp.int32)[:, None]
+    return _cm.coord_median(u, m, block_d=block_d, interpret=interpret)[:d]
+
+
+def trimmed_mean(updates, mask, *, trim: int, block_d: int | None = None,
+                 interpret: bool | None = None):
+    """(K, d), (K,) mask -> (d,) coordinate-wise trimmed mean (f32).
+
+    Compare-count rank trim among live rows (see kernels/trimmed_mean.py);
+    degrades to the masked mean when the live count <= 2*trim, mirroring the
+    jnp reference.  K exact, same compare-cube D-block bound as the median."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _trimmed_mean_jit(updates, mask, trim=trim, block_d=block_d,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block_d", "interpret"))
+def _trimmed_mean_jit(updates, mask, *, trim: int, block_d: int | None,
+                      interpret: bool):
+    K, d = updates.shape
+    block_d = block_d or _pick_block_d(d, K * K * 4, 512)
+    u = _pad_d(updates, block_d)
+    m = mask.astype(jnp.int32)[:, None]
+    return _tm.trimmed_mean(u, m, trim=trim, block_d=block_d,
+                            interpret=interpret)[:d]
+
+
+def afa_screen(updates, pn, mask0, *, xi0: float, delta_xi: float,
+               max_rounds: int, ddof: int = 0, block_d: int | None = None,
+               interpret: bool | None = None):
+    """Fused AFA screening: ONE Pallas launch -> (aggregate (d,), good_mask
+    (K,) bool, rounds scalar i32, sims (K,)).
+
+    ``pn`` is the (K,) reputation-times-count weight vector ``p_k * n_k``;
+    ``mask0`` the (K,) initial participation.  Geometry:
+
+    * interpret, or compiled off-TPU (``pallas-gpu``): the ONE-PASS launch on
+      the EXACT unpadded (K, d) — under the interpreter this is bit-identical
+      (f32) to ``afa_aggregate(variant="gram", use_kernels=False)``.
+    * compiled TPU (or an explicit ``block_d``): the TWO-PASS d-tiled grid;
+      K zero-padded to the sublane tile (exact: pad rows carry zero weight
+      and a dead mask), d padded to the block multiple, outputs sliced back.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _afa_screen_jit(
+        updates, pn, mask0, xi0=float(xi0), delta_xi=float(delta_xi),
+        max_rounds=int(max_rounds), ddof=int(ddof), block_d=block_d,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "xi0", "delta_xi", "max_rounds", "ddof", "block_d", "interpret"))
+def _afa_screen_jit(updates, pn, mask0, *, xi0: float, delta_xi: float,
+                    max_rounds: int, ddof: int, block_d: int | None,
+                    interpret: bool):
+    K, d = updates.shape
+    u = updates.astype(jnp.float32)
+    pn32 = pn.astype(jnp.float32)
+    m0 = mask0.astype(jnp.int32)
+    screen_kw = dict(xi0=xi0, delta_xi=delta_xi, max_rounds=max_rounds, ddof=ddof)
+    if block_d is None and (interpret or not _on_tpu()):
+        agg, good, rounds, sims = _as.afa_screen_call(
+            u, pn32, m0, block_d=None, interpret=interpret, **screen_kw
+        )
+        return agg, good != 0, rounds, sims
+    up = _pad_rows(u)
+    Kp = up.shape[0]
+    block_d = block_d or _pick_block_d(d, (Kp + 2 * Kp * Kp // 2048) * 4, 2048)
+    up = _pad_d(up, block_d)
+    agg, good, rounds, sims = _as.afa_screen_call(
+        up, _pad_rows(pn32[:, None])[:, 0], _pad_rows(m0[:, None])[:, 0],
+        block_d=block_d, interpret=interpret, **screen_kw
+    )
+    return agg[:d], good[:K] != 0, rounds, sims[:K]
 
 
 def weighted_sum(weights, updates, *, block_d: int | None = None, interpret: bool | None = None):

@@ -1,20 +1,29 @@
-"""Kernel execution policy: ``pallas`` / ``jnp`` / ``interpret``.
+"""Kernel execution policy: ``pallas`` / ``pallas-gpu`` / ``jnp`` / ``interpret``.
 
 Replaces the old TPU-only ``_use_pallas`` boolean gate.  That gate meant the
 Pallas route was dead code everywhere except a real TPU — no CI job ever
 executed a kernel through the rule dispatch, so kernel regressions could only
-surface in production.  The three-way policy makes the route testable on any
-backend:
+surface in production.  The multi-backend policy makes the route testable on
+any backend:
 
-* ``pallas``     — compiled Pallas kernels (TPU; elsewhere compilation fails,
-                   which is the caller's explicit choice to see).
+* ``pallas``     — compiled Pallas kernels via Mosaic (TPU; elsewhere
+                   compilation fails, which is the caller's explicit choice
+                   to see).
+* ``pallas-gpu`` — compiled Pallas kernels via the Triton lowering (GPU).
+                   CUDA thread blocks run the grid in PARALLEL, so the ops
+                   wrappers pick single-d-pass launch geometries on this
+                   route — the TPU kernels' sequential cross-step
+                   accumulation is never relied on (see ``ops.py``).
 * ``jnp``        — the pure-jnp reference path in ``repro.core`` (the default
-                   off-TPU: interpret-mode Pallas is orders of magnitude
-                   slower than XLA, so it is never chosen implicitly).
+                   off-accelerator: interpret-mode Pallas is orders of
+                   magnitude slower than XLA, so it is never chosen
+                   implicitly).
 * ``interpret``  — Pallas kernels under ``interpret=True``: the same kernel
                    bodies, executed by the Pallas interpreter on CPU.  Slow,
                    but runs everywhere — the CI ``kernel-parity`` job uses it
-                   to assert every kernel against its jnp oracle.
+                   to assert every kernel against its jnp oracle, and the
+                   fused AFA screening kernel is asserted BIT-identical (f32)
+                   to the jnp gram reference on this route.
 
 Selection has two inputs, resolved by :func:`resolve_kernel_mode`:
 
@@ -39,7 +48,9 @@ import os
 import jax
 
 ENV_VAR = "REPRO_KERNELS"
-MODES = ("pallas", "jnp", "interpret")
+MODES = ("pallas", "pallas-gpu", "jnp", "interpret")
+# modes that execute compiled (non-interpreted) Pallas kernels
+COMPILED_MODES = ("pallas", "pallas-gpu")
 
 
 def requested_policy() -> str:
@@ -57,7 +68,7 @@ def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
 
     * ``False``/``None`` -> ``jnp`` (kernels not requested; env is ignored).
     * ``True``  -> the ``$REPRO_KERNELS`` policy; ``auto`` picks ``pallas``
-      on TPU and ``jnp`` everywhere else (the old gate's behavior).
+      on TPU, ``pallas-gpu`` on GPU, and ``jnp`` everywhere else.
     * a mode string -> itself (``"auto"`` re-resolves by backend).
     """
     if use_kernels is None or use_kernels is False:
@@ -65,7 +76,12 @@ def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
     policy = use_kernels if isinstance(use_kernels, str) else requested_policy()
     policy = policy.strip().lower()
     if policy == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        backend = jax.default_backend()
+        if backend == "tpu":
+            return "pallas"
+        if backend == "gpu":
+            return "pallas-gpu"
+        return "jnp"
     if policy not in MODES:
         raise ValueError(
             f"kernel mode {policy!r} invalid; expected one of {('auto',) + MODES}"
@@ -77,9 +93,10 @@ def explicit_kernel_request(use_kernels: bool | str | None) -> str | None:
     """The mode the caller *explicitly* named, or None for auto selection.
 
     Explicit means: ``use_kernels`` is a mode string, or it is truthy while
-    ``$REPRO_KERNELS`` pins a concrete mode.  Rules without a kernel (e.g.
-    trimmed-mean) silently use the jnp reference under auto selection but
-    raise when a kernel route is explicitly demanded.
+    ``$REPRO_KERNELS`` pins a concrete mode.  Rules whose hot op has no
+    kernel (geometric-median / centered-clip iterations) silently use the
+    jnp reference under auto selection but raise when a kernel route is
+    explicitly demanded.
     """
     if isinstance(use_kernels, str) and use_kernels.strip().lower() != "auto":
         return resolve_kernel_mode(use_kernels)

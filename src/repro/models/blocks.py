@@ -65,13 +65,27 @@ def _qkv(p, cfg, x, positions, *, head_local: bool = False):
     return q, k, v
 
 
+def _attn_policy() -> str:
+    """Kernel-policy route for the Pallas attention backend.
+
+    ``use_pallas_attention=True`` is an explicit config request, so it is
+    honored under ``auto`` (the ops wrapper compiles on accelerators and
+    interprets on CPU) — but the process-wide policy still governs:
+    ``$REPRO_KERNELS=jnp`` vetoes the Pallas backend (the jnp flash
+    attention runs instead) and ``interpret``/``pallas``/``pallas-gpu`` pin
+    the execution route, exactly as for the aggregation kernels."""
+    from repro.kernels.policy import requested_policy
+
+    return requested_policy()
+
+
 def apply_attn(p, cfg, x, *, positions, use_window: bool = False):
     q, k, v = _qkv(p, cfg, x, positions, head_local=cfg.activation_sharding)
     if use_window and cfg.sliding_window:
         out = sliding_window_attention(
             q, k, v, window=cfg.sliding_window, block_q=cfg.block_q
         )
-    elif cfg.use_pallas_attention and not cfg.prefix_len:
+    elif cfg.use_pallas_attention and not cfg.prefix_len and _attn_policy() != "jnp":
         from repro.kernels import flash_attention as pallas_flash
 
         out = pallas_flash(

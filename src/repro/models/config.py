@@ -72,6 +72,9 @@ class ModelConfig:
     # Use the Pallas flash-attention kernel (repro.kernels.flash_attn) as the
     # attention backend for forward/train (causal or full, no prefix-LM).
     # interpret=True on CPU; explicit VMEM tiling on TPU — the §Perf-C fix.
+    # Policy-routed like the aggregation kernels: $REPRO_KERNELS=jnp vetoes
+    # the kernel (pure-JAX flash attention runs), interpret/pallas/pallas-gpu
+    # pin the execution route (repro.kernels.policy).
     use_pallas_attention: bool = False
 
     @property

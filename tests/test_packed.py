@@ -326,10 +326,12 @@ def test_resolve_kernel_mode_defaults(monkeypatch):
     monkeypatch.delenv(ENV_VAR, raising=False)
     assert resolve_kernel_mode(False) == "jnp"
     assert resolve_kernel_mode(None) == "jnp"
-    on_tpu = jax.default_backend() == "tpu"
-    assert resolve_kernel_mode(True) == ("pallas" if on_tpu else "jnp")
+    backend = jax.default_backend()
+    expected = {"tpu": "pallas", "gpu": "pallas-gpu"}.get(backend, "jnp")
+    assert resolve_kernel_mode(True) == expected
     assert resolve_kernel_mode("interpret") == "interpret"
     assert resolve_kernel_mode("pallas") == "pallas"
+    assert resolve_kernel_mode("pallas-gpu") == "pallas-gpu"
     assert resolve_kernel_mode("jnp") == "jnp"
     assert explicit_kernel_request(True) is None
     assert explicit_kernel_request("interpret") == "interpret"
@@ -346,38 +348,49 @@ def test_resolve_kernel_mode_env_override(monkeypatch):
         requested_policy()
 
 
-def test_trimmed_mean_raises_on_explicit_kernel_demand(monkeypatch):
-    """Satellite regression: trimmed_mean used to accept use_kernels and
-    silently ignore it.  It now raises on an explicit kernel demand (there is
-    no trimmed-mean kernel) and keeps the jnp reference under auto
-    selection.  (Env pinned to auto: with $REPRO_KERNELS set, use_kernels=
-    True IS an explicit demand — covered by the test below.)"""
+def test_trimmed_mean_kernel_route_matches_reference(monkeypatch):
+    """trimmed_mean used to raise NotImplementedError on an explicit kernel
+    demand; it now routes through the masked rank-trim kernel
+    (kernels/trimmed_mean.py), which must match the sort-based reference —
+    masked, unmasked, and in the empty-trim-window degradation."""
     monkeypatch.delenv(ENV_VAR, raising=False)
-    K, d = 6, 16
+    K, d = 9, 33
     U = jnp.asarray(RNG.normal(size=(K, d)).astype(np.float32))
-    ref = trimmed_mean_aggregate(U, trim=1, use_kernels=False)
-    auto = trimmed_mean_aggregate(U, trim=1, use_kernels=True)  # auto: ok
-    np.testing.assert_array_equal(
-        np.asarray(ref.aggregate), np.asarray(auto.aggregate)
+    mask = jnp.asarray([True] * 6 + [False] * 3)
+    for m in (None, mask):
+        ref = trimmed_mean_aggregate(U, mask=m, trim=2, use_kernels=False)
+        krn = trimmed_mean_aggregate(U, mask=m, trim=2, use_kernels="interpret")
+        np.testing.assert_allclose(
+            np.asarray(krn.aggregate), np.asarray(ref.aggregate),
+            rtol=1e-5, atol=1e-5,
+        )
+    # m <= 2*trim: both must degrade to the masked mean, not a zero aggregate
+    small = jnp.asarray([True] * 3 + [False] * 6)
+    ref = trimmed_mean_aggregate(U, mask=small, trim=2, use_kernels=False)
+    krn = trimmed_mean_aggregate(U, mask=small, trim=2, use_kernels="interpret")
+    np.testing.assert_allclose(
+        np.asarray(krn.aggregate), np.asarray(ref.aggregate), rtol=1e-5, atol=1e-5
     )
-    with pytest.raises(NotImplementedError, match="trimmed_mean"):
-        trimmed_mean_aggregate(U, trim=1, use_kernels="pallas")
-    with pytest.raises(NotImplementedError, match="trimmed_mean"):
-        trimmed_mean_aggregate(U, trim=1, use_kernels="interpret")
+    assert float(jnp.abs(krn.aggregate).sum()) > 0.0
 
 
-def test_trimmed_mean_raises_under_env_pinned_mode(monkeypatch):
-    """use_kernels=True while $REPRO_KERNELS pins a kernel mode is an
-    explicit demand too.  (Fresh `trim` value -> fresh trace: the raise
-    happens at trace time, so a cached jit signature would mask it.)"""
+def test_trimmed_mean_kernel_under_env_pinned_mode(monkeypatch):
+    """use_kernels=True while $REPRO_KERNELS pins a kernel mode engages the
+    kernel route (this combination used to raise).  Fresh `trim` value ->
+    fresh trace, so a cached jit signature cannot mask a routing bug."""
     monkeypatch.setenv(ENV_VAR, "interpret")
-    K, d = 6, 16
+    K, d = 8, 16
     U = jnp.asarray(RNG.normal(size=(K, d)).astype(np.float32))
-    with pytest.raises(NotImplementedError, match="trimmed_mean"):
-        trimmed_mean_aggregate(U, trim=2, use_kernels=True)
+    ref = trimmed_mean_aggregate(U, trim=3, use_kernels=False)
+    krn = trimmed_mean_aggregate(U, trim=3, use_kernels=True)
+    np.testing.assert_allclose(
+        np.asarray(krn.aggregate), np.asarray(ref.aggregate), rtol=1e-5, atol=1e-5
+    )
 
 
-@pytest.mark.parametrize("rule", ["fa", "mkrum", "norm_clip", "afa"])
+@pytest.mark.parametrize(
+    "rule", ["fa", "mkrum", "norm_clip", "afa", "comed", "trimmed_mean", "bulyan"]
+)
 def test_interpret_mode_dispatch_matches_jnp_reference(rule):
     """The dispatch-level kernel route, executed via the Pallas interpreter
     on CPU, must agree with the jnp reference path — this is the coverage
@@ -406,6 +419,10 @@ def test_interpret_mode_dispatch_matches_jnp_reference(rule):
 
 
 def test_afa_gram_variant_interpret_kernels_match_reference():
+    """variant="gram" + a kernel mode now takes the FUSED screening launch
+    (kernel_launch="fused", the default) — bit-identical to the jnp gram
+    reference on the interpret route; kernel_launch="chained" keeps the PR-4
+    per-op launches, allclose as before."""
     from repro.core import AFAConfig, afa_aggregate
 
     K, d = 8, 64
@@ -423,7 +440,25 @@ def test_afa_gram_variant_interpret_kernels_match_reference():
         np.testing.assert_array_equal(
             np.asarray(ref.good_mask), np.asarray(krn.good_mask)
         )
-        np.testing.assert_allclose(
-            np.asarray(ref.aggregate), np.asarray(krn.aggregate),
-            rtol=1e-5, atol=1e-5,
-        )
+        if variant == "gram":  # fused route: exact shapes, bitwise
+            np.testing.assert_array_equal(
+                np.asarray(ref.aggregate), np.asarray(krn.aggregate)
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(ref.aggregate), np.asarray(krn.aggregate),
+                rtol=1e-5, atol=1e-5,
+            )
+        if variant == "gram":
+            chained = afa_aggregate(
+                U, n_k, p_k,
+                config=AFAConfig(variant=variant, use_kernels="interpret",
+                                 kernel_launch="chained"),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ref.good_mask), np.asarray(chained.good_mask)
+            )
+            np.testing.assert_allclose(
+                np.asarray(ref.aggregate), np.asarray(chained.aggregate),
+                rtol=1e-5, atol=1e-5,
+            )
