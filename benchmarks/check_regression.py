@@ -22,6 +22,14 @@ vs chained launches / jnp oracle) get a wider default tolerance — on CPU CI
 they time the Pallas *interpreter*, whose per-launch overhead is noisier
 than the compiled engines' round times — override with ``--kernel-tolerance``.
 
+Absolute floors: scenarios whose baseline has been rounded down near parity
+(runner variance can pin a conservative baseline at ~1.0x, where a
+fractional tolerance would only fire *below* parity-minus-tolerance) also
+carry an ABSOLUTE floor, independent of the baseline: the ``packed_agg_*``
+scenarios fail outright when the packed dispatch drops below 1.0x — the
+speedup class collapsing to (or past) parity is exactly what the gate
+exists to catch, however noisy the runner.
+
 Usage:  python benchmarks/check_regression.py CURRENT.json BASELINE.json
             [--tolerance 0.25] [--kernel-tolerance 0.5]
 """
@@ -36,12 +44,25 @@ import sys
 # unlisted uses --tolerance
 PREFIX_TOLERANCE_OPTS = {"kernel_": "kernel_tolerance"}
 
+# scenario-name prefix -> absolute speedup floor, applied IN ADDITION to the
+# baseline-relative tolerance.  The packed dispatch must never lose to the
+# leaf layout it replaced: even with its conservative baseline rounded down
+# to ~1.0x, dropping below parity fails the gate outright.
+PREFIX_ABS_FLOOR = {"packed_agg/": 1.0}
+
 
 def tolerance_for(name: str, args: argparse.Namespace) -> float:
     for prefix, opt in PREFIX_TOLERANCE_OPTS.items():
         if name.startswith(prefix):
             return getattr(args, opt)
     return args.tolerance
+
+
+def abs_floor_for(name: str) -> float | None:
+    for prefix, floor in PREFIX_ABS_FLOOR.items():
+        if name.startswith(prefix):
+            return floor
+    return None
 
 
 def collect_speedups(doc: dict) -> dict[str, float]:
@@ -84,9 +105,13 @@ def main(argv: list[str] | None = None) -> int:
     for name in shared:
         tol = tolerance_for(name, args)
         floor = base[name] * (1.0 - tol)
+        abs_floor = abs_floor_for(name)
+        if abs_floor is not None:
+            floor = max(floor, abs_floor)
         status = "OK" if cur[name] >= floor else "REGRESSED"
+        extra = f", abs floor {abs_floor:.2f}x" if abs_floor is not None else ""
         print(f"{status:9s} {name}: current {cur[name]:.2f}x vs baseline "
-              f"{base[name]:.2f}x (floor {floor:.2f}x, tol {tol:.0%})")
+              f"{base[name]:.2f}x (floor {floor:.2f}x, tol {tol:.0%}{extra})")
         if cur[name] < floor:
             failures.append(name)
     for name in sorted(set(cur) - set(base)):

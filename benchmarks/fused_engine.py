@@ -327,7 +327,7 @@ def run_kernel(tiny: bool = False) -> tuple[list[dict], list[dict]]:
     from repro.kernels.policy import resolve_kernel_mode
 
     mode = resolve_kernel_mode(True)
-    if mode == "jnp":  # off-accelerator auto: the interpreter IS the kernel route
+    if mode == "jnp":  # auto off-TPU (GPU included): the interpreter IS the kernel route
         mode = "interpret"
     ks = [50] if tiny else [50, 200, 512]
     rows, record = [], []

@@ -74,9 +74,9 @@ class AFAConfig(NamedTuple):
     ddof: int = 0
     variant: str = "iterative"  # "iterative" | "gram"
     # Route the hot ops through the Pallas kernels: bool for auto selection
-    # via $REPRO_KERNELS (pallas on TPU, pallas-gpu on GPU, jnp elsewhere) or
-    # a pinned mode string "pallas" / "pallas-gpu" / "jnp" / "interpret" (see
-    # repro.kernels.policy).  Matrix form only — the tree form is already
+    # via $REPRO_KERNELS (pallas on TPU, jnp elsewhere — pallas-gpu is an
+    # explicit opt-in, see repro.kernels.policy) or a pinned mode string
+    # "pallas" / "pallas-gpu" / "jnp" / "interpret".  Matrix form only — the tree form is already
     # XLA-fused.  With variant="gram" a kernel mode selects the FUSED
     # screening kernel by default (kernel_launch="fused"): Algorithm 1 runs
     # as ONE Pallas launch — gram, VMEM-resident screening loop, and final
@@ -87,7 +87,8 @@ class AFAConfig(NamedTuple):
     # "fused" (one afa_screen launch, gram variant only) | "chained" (the
     # PR-4 route: separate gram / weighted-sum kernel launches around an
     # XLA-composed while loop — kept as the benchmark baseline the fused
-    # launch is gated against).
+    # launch is gated against).  afa_aggregate validates the value: anything
+    # else raises ValueError rather than silently taking the chained route.
     kernel_launch: str = "fused"
 
 
@@ -133,6 +134,16 @@ def afa_aggregate(
     mask0: jnp.ndarray | None = None,  # (K,) initial participation
     config: AFAConfig = AFAConfig(),
 ) -> AFAResult:
+    if config.kernel_launch not in ("fused", "chained"):
+        raise ValueError(
+            f"AFAConfig.kernel_launch={config.kernel_launch!r} invalid; "
+            "expected 'fused' or 'chained'"
+        )
+    if config.variant not in ("iterative", "gram"):
+        raise ValueError(
+            f"AFAConfig.variant={config.variant!r} invalid; "
+            "expected 'iterative' or 'gram'"
+        )
     K = updates.shape[0]
     mask0 = jnp.ones((K,), bool) if mask0 is None else mask0
     upd32 = updates.astype(jnp.float32)
@@ -262,6 +273,11 @@ def afa_aggregate_tree(
     mask0: jnp.ndarray | None = None,
     config: AFAConfig = AFAConfig(),
 ) -> AFAResult:
+    if config.variant not in ("iterative", "gram"):
+        raise ValueError(
+            f"AFAConfig.variant={config.variant!r} invalid; "
+            "expected 'iterative' or 'gram'"
+        )
     leaves = jax.tree_util.tree_leaves(stacked_updates)
     K = leaves[0].shape[0]
     mask0 = jnp.ones((K,), bool) if mask0 is None else mask0

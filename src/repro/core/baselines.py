@@ -39,7 +39,8 @@ sharded trees that must not be concatenated.
 Triton lowering), ``jnp`` (this file's reference path), ``interpret`` (the
 same Pallas kernel bodies under the interpreter — any backend; the CI
 kernel-parity route).  ``use_kernels=True`` consults ``$REPRO_KERNELS``
-(auto -> pallas on TPU, pallas-gpu on GPU, jnp elsewhere); a mode string
+(auto -> pallas on TPU, jnp elsewhere; pallas-gpu is never auto-selected —
+its single-block geometries only fit small operands); a mode string
 pins the route.  Rules whose hot op has no kernel (geomed/centered-clip's
 iterations) use the reference path under auto selection and raise on an
 explicit kernel demand.  comed and trimmed-mean both route through masked

@@ -66,9 +66,10 @@ class ServerConfig:
     # Route every rule's hot ops (the fused AFA screen, gram / cosine-sim /
     # weighted-sum, coord-median, trimmed-mean) through the Pallas kernels.
     # A bool selects automatically via $REPRO_KERNELS (auto -> pallas on TPU,
-    # pallas-gpu on GPU, the jnp reference elsewhere — interpret-mode Pallas
-    # is far slower than XLA); a mode string "pallas" / "pallas-gpu" / "jnp" /
-    # "interpret" pins the route (repro.kernels.policy).
+    # the jnp reference elsewhere — interpret-mode Pallas is far slower than
+    # XLA, and the Triton route only fits block-resident operands, so
+    # "pallas-gpu" is explicit opt-in); a mode string "pallas" /
+    # "pallas-gpu" / "jnp" / "interpret" pins the route (repro.kernels.policy).
     # ``make_rule_options`` resolves the request on the host, so the resolved
     # mode — not the ambient env var — keys the jit cache.  The comed and
     # trimmed-mean kernels are mask-aware (compare-count rank selection), so

@@ -27,7 +27,9 @@ Two launch geometries, selected by ``ops.afa_screen``:
   kernel runs on the EXACT unpadded shapes and is BIT-identical (f32) to
   ``afa_aggregate(variant="gram", use_kernels=False)`` — asserted by the
   parity suite) and for ``pallas-gpu`` (no cross-step accumulation, so the
-  parallel CUDA grid is safe).
+  parallel CUDA grid is safe — but the whole operand becomes one resident
+  block, so ``ops.afa_screen`` gates that route on ``GPU_ONEPASS_BUDGET``
+  and raises for operands that cannot be block-resident).
 * **two-pass** (``block_d=BD``): grid ``(2, D/BD)`` with the d axis
   minor-most.  Pass 0 accumulates gram + norms tile by tile and runs the
   screening at its last step; pass 1 emits the aggregate tiles.  ``G``, the

@@ -16,12 +16,20 @@ arbitrary K and full model D, so each wrapper
   force compiled kernels, ``auto``/``jnp`` interprets everywhere except a
   real accelerator backend.
 
-Geometry is backend-aware where it matters: the fused AFA screening kernel
-uses its one-pass launch (whole operand resident, no cross-step state) under
-the interpreter — where it runs on the EXACT unpadded shapes and is
-bit-identical to the jnp reference — and on GPU, whose Triton grid is
-parallel; the two-pass d-tiled grid with resident accumulator blocks is
-reserved for backends with sequential grids (TPU).
+Geometry is backend-aware where it matters.  The gram, cosine-sim, and
+fused-AFA-screen kernels accumulate into constant-index output blocks across
+d-grid steps — safe ONLY on sequential grids (TPU, interpret).  Triton runs
+the grid in PARALLEL, so any compiled launch off-TPU (the explicit
+``pallas-gpu`` mode) is forced onto a SINGLE-grid-step geometry: the whole
+padded operand (plus the (K, K) gram for gram/afa_screen) must be resident
+in one block, checked against ``GPU_ONEPASS_BUDGET``.  Operands past the
+budget raise :class:`NotImplementedError` at trace time — a clear error
+instead of racy accumulation or an OOMing mega-block; callers that cannot
+fit should use ``jnp`` (reference) or ``interpret`` (parity).  The
+remaining kernels (weighted-sum, coord-median, trimmed-mean) write a
+distinct output block per grid step and are parallel-grid safe as-is;
+flash-attention carries its kv recurrence in ``pltpu.VMEM`` scratch, so a
+compiled off-TPU launch fails loudly at lowering rather than racing.
 """
 
 from __future__ import annotations
@@ -42,6 +50,10 @@ from repro.kernels.policy import COMPILED_MODES, requested_policy
 EPS = 1e-12
 VMEM_BUDGET = 8 * 1024 * 1024  # bytes we allow a block working set to claim
 ROW_TILE = 8                   # f32 sublane multiple the K axis is padded to
+# compiled off-TPU (Triton) launches must hold the WHOLE operand in one grid
+# step (parallel grids cannot accumulate across steps); this caps that
+# single resident block
+GPU_ONEPASS_BUDGET = VMEM_BUDGET
 
 
 def _on_tpu() -> bool:
@@ -54,7 +66,28 @@ def _default_interpret() -> bool:
         return True
     if policy in COMPILED_MODES:
         return False
-    return jax.default_backend() not in ("tpu", "gpu")
+    # auto/jnp: compiled kernels only on TPU — elsewhere (GPU included) a
+    # direct ops call interprets, since the accumulating kernels have no
+    # parallel-grid-safe tiled geometry (see module docstring)
+    return not _on_tpu()
+
+
+def _check_gpu_onepass(op: str, nbytes: int) -> None:
+    """Refuse a compiled off-TPU launch whose one-pass block cannot fit.
+
+    The d-tiled geometries accumulate across grid steps, which Triton's
+    parallel grid would race, so off-TPU the only safe compiled geometry is
+    a single grid step with the whole operand resident — bounded here."""
+    if nbytes > GPU_ONEPASS_BUDGET:
+        raise NotImplementedError(
+            f"kernels.{op}: compiled off-TPU (pallas-gpu) requires the whole "
+            f"operand in ONE resident block, but this launch needs "
+            f"{nbytes / 2**20:.1f} MiB > budget "
+            f"{GPU_ONEPASS_BUDGET / 2**20:.1f} MiB (the d-tiled grids "
+            f"accumulate across steps and are only safe on sequential TPU "
+            f"grids). Use REPRO_KERNELS=jnp (XLA reference) or interpret "
+            f"(parity route) for operands this size."
+        )
 
 
 def _pad_d(x: jnp.ndarray, block_d: int) -> jnp.ndarray:
@@ -97,6 +130,11 @@ def cosine_sim(updates, agg, *, block_d: int | None = None, interpret: bool | No
 def _cosine_sim_jit(updates, agg, *, block_d: int | None, interpret: bool):
     K, d = updates.shape
     u = _pad_rows(updates)
+    if not interpret and not _on_tpu():
+        # parallel (Triton) grid: the kernel's cross-step `+=` on the
+        # constant-index dots/norms blocks would race — force one grid step
+        _check_gpu_onepass("cosine_sim", (u.shape[0] + 1) * d * 4)
+        block_d = d
     block_d = block_d or _pick_block_d(d, (u.shape[0] + 1) * 4, 2048)
     u = _pad_d(u, block_d)
     w = _pad_d(agg[None, :], block_d)
@@ -122,7 +160,12 @@ def _gram_jit(updates, *, block_d: int | None, block_k: int | None, interpret: b
     K, d = updates.shape
     u = _pad_rows(updates)
     Kp = u.shape[0]
-    if block_k is None and Kp > 512:
+    if not interpret and not _on_tpu():
+        # parallel (Triton) grid: both gram layouts accumulate the (K, K)
+        # block across d-steps — force the single-tile, single-d-step layout
+        _check_gpu_onepass("gram", (Kp * d + Kp * Kp) * 4)
+        block_d, block_k = d, None
+    elif block_k is None and Kp > 512:
         block_k = 256
     rows = block_k or Kp
     block_d = block_d or _pick_block_d(d, 2 * rows * 4, 2048)
@@ -198,12 +241,19 @@ def afa_screen(updates, pn, mask0, *, xi0: float, delta_xi: float,
     ``pn`` is the (K,) reputation-times-count weight vector ``p_k * n_k``;
     ``mask0`` the (K,) initial participation.  Geometry:
 
-    * interpret, or compiled off-TPU (``pallas-gpu``): the ONE-PASS launch on
-      the EXACT unpadded (K, d) — under the interpreter this is bit-identical
-      (f32) to ``afa_aggregate(variant="gram", use_kernels=False)``.
-    * compiled TPU (or an explicit ``block_d``): the TWO-PASS d-tiled grid;
-      K zero-padded to the sublane tile (exact: pad rows carry zero weight
-      and a dead mask), d padded to the block multiple, outputs sliced back.
+    * interpret: the ONE-PASS launch on the EXACT unpadded (K, d) —
+      bit-identical (f32) to ``afa_aggregate(variant="gram",
+      use_kernels=False)``.
+    * compiled off-TPU (``pallas-gpu``): also the one-pass launch (the
+      two-pass grid's resident accumulators need a sequential grid, so an
+      explicit ``block_d`` is ignored here), which makes the whole (K, d)
+      operand plus the (K, K) gram ONE resident block — gated by
+      ``GPU_ONEPASS_BUDGET``; oversized operands raise
+      :class:`NotImplementedError` instead of OOMing (use jnp/interpret).
+    * compiled TPU (or interpret with an explicit ``block_d``): the TWO-PASS
+      d-tiled grid; K zero-padded to the sublane tile (exact: pad rows carry
+      zero weight and a dead mask), d padded to the block multiple, outputs
+      sliced back.
     """
     interpret = _default_interpret() if interpret is None else interpret
     return _afa_screen_jit(
@@ -223,6 +273,12 @@ def _afa_screen_jit(updates, pn, mask0, *, xi0: float, delta_xi: float,
     pn32 = pn.astype(jnp.float32)
     m0 = mask0.astype(jnp.int32)
     screen_kw = dict(xi0=xi0, delta_xi=delta_xi, max_rounds=max_rounds, ddof=ddof)
+    if not interpret and not _on_tpu():
+        # parallel (Triton) grid: the two-pass route's resident gram/weight
+        # blocks accumulate across d-steps — only the one-pass geometry is
+        # safe, and it must fit a single resident block
+        _check_gpu_onepass("afa_screen", (K * d + K * K + 4 * K) * 4)
+        block_d = None
     if block_d is None and (interpret or not _on_tpu()):
         agg, good, rounds, sims = _as.afa_screen_call(
             u, pn32, m0, block_d=None, interpret=interpret, **screen_kw

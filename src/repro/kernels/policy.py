@@ -10,10 +10,14 @@ any backend:
                    compilation fails, which is the caller's explicit choice
                    to see).
 * ``pallas-gpu`` — compiled Pallas kernels via the Triton lowering (GPU).
-                   CUDA thread blocks run the grid in PARALLEL, so the ops
-                   wrappers pick single-d-pass launch geometries on this
-                   route — the TPU kernels' sequential cross-step
-                   accumulation is never relied on (see ``ops.py``).
+                   EXPLICIT OPT-IN ONLY: Triton runs the grid in PARALLEL,
+                   so the ops wrappers force single-grid-step geometries on
+                   this route (the TPU kernels' sequential cross-step
+                   accumulation is never relied on) — which requires the
+                   whole operand to be block-resident.  Oversized operands
+                   raise a clear error instead of racing or OOMing
+                   (see ``ops.py``); ``auto`` therefore never selects this
+                   mode.
 * ``jnp``        — the pure-jnp reference path in ``repro.core`` (the default
                    off-accelerator: interpret-mode Pallas is orders of
                    magnitude slower than XLA, so it is never chosen
@@ -68,7 +72,11 @@ def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
 
     * ``False``/``None`` -> ``jnp`` (kernels not requested; env is ignored).
     * ``True``  -> the ``$REPRO_KERNELS`` policy; ``auto`` picks ``pallas``
-      on TPU, ``pallas-gpu`` on GPU, and ``jnp`` everywhere else.
+      on TPU and ``jnp`` everywhere else.  GPU is NOT auto-selected: the
+      Triton route only has single-block geometries (gram / cosine-sim
+      accumulate across grid steps, which a parallel grid would race), so
+      ``pallas-gpu`` stays an explicit opt-in for operands that fit one
+      resident block.
     * a mode string -> itself (``"auto"`` re-resolves by backend).
     """
     if use_kernels is None or use_kernels is False:
@@ -76,12 +84,7 @@ def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
     policy = use_kernels if isinstance(use_kernels, str) else requested_policy()
     policy = policy.strip().lower()
     if policy == "auto":
-        backend = jax.default_backend()
-        if backend == "tpu":
-            return "pallas"
-        if backend == "gpu":
-            return "pallas-gpu"
-        return "jnp"
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
     if policy not in MODES:
         raise ValueError(
             f"kernel mode {policy!r} invalid; expected one of {('auto',) + MODES}"

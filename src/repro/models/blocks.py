@@ -69,8 +69,8 @@ def _attn_policy() -> str:
     """Kernel-policy route for the Pallas attention backend.
 
     ``use_pallas_attention=True`` is an explicit config request, so it is
-    honored under ``auto`` (the ops wrapper compiles on accelerators and
-    interprets on CPU) — but the process-wide policy still governs:
+    honored under ``auto`` (the ops wrapper compiles on TPU and interprets
+    elsewhere) — but the process-wide policy still governs:
     ``$REPRO_KERNELS=jnp`` vetoes the Pallas backend (the jnp flash
     attention runs instead) and ``interpret``/``pallas``/``pallas-gpu`` pin
     the execution route, exactly as for the aggregation kernels."""

@@ -258,3 +258,67 @@ def test_fused_trajectory_identity_through_dispatch_rule():
         p_fused = jnp.where(r_fused.good_mask, p_fused * 1.1, p_fused * 0.5)
         m_ref = r_ref.good_mask
         m_fused = r_fused.good_mask
+
+
+def test_afa_config_rejects_bogus_kernel_launch_and_variant():
+    """Anything but the exact mode strings raises instead of silently
+    falling through to the chained / iterative route (which would skew
+    fused-vs-chained benchmarks without a whisper)."""
+    u, n_k, p_k = _workload(RNG, 6, 40)
+    for launch in ("Fused", "chain", "", "FUSED"):
+        with pytest.raises(ValueError, match="kernel_launch"):
+            afa_aggregate(
+                u, n_k, p_k,
+                config=AFAConfig(variant="gram", kernel_launch=launch),
+            )
+    with pytest.raises(ValueError, match="variant"):
+        afa_aggregate(u, n_k, p_k, config=AFAConfig(variant="Gram"))
+    from repro.core.afa import afa_aggregate_tree
+
+    with pytest.raises(ValueError, match="variant"):
+        afa_aggregate_tree(
+            {"w": u}, n_k, p_k, config=AFAConfig(variant="bogus")
+        )
+
+
+# --------------- compiled-off-TPU (pallas-gpu) one-pass gate -----------------
+#
+# Triton grids are parallel, so the accumulating kernels (gram, cosine-sim,
+# the fused screen) only get a single-grid-step geometry off-TPU — the whole
+# operand must be one resident block.  Oversized operands must raise at
+# trace time, never compile into racy accumulation or an OOMing mega-block.
+# jax.eval_shape traces without materializing, so these run anywhere (the
+# gate keys off the backend, not on actually having a GPU).
+
+
+def test_gpu_onepass_gate_refuses_oversized_operands():
+    if jax.default_backend() == "tpu":
+        pytest.skip("the one-pass gate only applies to compiled off-TPU launches")
+    from repro.kernels import afa_screen as afa_screen_op
+    from repro.kernels import cosine_sim, gram
+
+    big = jax.ShapeDtypeStruct((8, 1_000_000), jnp.float32)
+    vec = jax.ShapeDtypeStruct((1_000_000,), jnp.float32)
+    kvec = jax.ShapeDtypeStruct((8,), jnp.float32)
+    kmask = jax.ShapeDtypeStruct((8,), jnp.int32)
+    with pytest.raises(NotImplementedError, match="pallas-gpu"):
+        jax.eval_shape(lambda u: gram(u, interpret=False), big)
+    with pytest.raises(NotImplementedError, match="pallas-gpu"):
+        jax.eval_shape(lambda u, w: cosine_sim(u, w, interpret=False), big, vec)
+    with pytest.raises(NotImplementedError, match="pallas-gpu"):
+        jax.eval_shape(
+            lambda u, pn, m: afa_screen_op(
+                u, pn, m, xi0=2.0, delta_xi=0.5, max_rounds=3, interpret=False
+            ),
+            big, kvec, kmask,
+        )
+
+
+def test_gpu_onepass_gate_allows_block_resident_operands():
+    if jax.default_backend() == "tpu":
+        pytest.skip("the one-pass gate only applies to compiled off-TPU launches")
+    from repro.kernels import gram
+
+    small = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+    out = jax.eval_shape(lambda u: gram(u, interpret=False), small)
+    assert out.shape == (8, 8)
