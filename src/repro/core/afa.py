@@ -90,6 +90,23 @@ class AFAConfig(NamedTuple):
     # launch is gated against).  afa_aggregate validates the value: anything
     # else raises ValueError rather than silently taking the chained route.
     kernel_launch: str = "fused"
+    # Hierarchical two-stage screening over a mesh client axis (DESIGN.md
+    # §4).  When ``client_axis`` names a shard_map axis and ``client_shards``
+    # > 1, ``afa_aggregate`` treats its inputs as the SHARD-LOCAL row block
+    # (K_local = K / client_shards rows) and runs Algorithm 1 with exactly
+    # two collective shapes per screening iteration: one ``psum`` of the
+    # (d,) partial weighted aggregate and one tiled ``all_gather`` of the
+    # K_local similarity scalars (O(K) scalars round-trip total); the
+    # screening stats compute on shard 0 and broadcast as a 3-scalar psum,
+    # with only the elementwise mask update replicated.  The final
+    # reputation-weighted aggregate is one more weighted (d,) ``psum``.  The
+    # full (K, d) matrix is never gathered.  With ``client_shards <= 1`` the
+    # config falls through to the unsharded code path verbatim, so a
+    # one-shard client mesh is bit-identical to today's single-device route
+    # by construction (mega-kernel included).  Both fields are static and
+    # key the jit cache.
+    client_axis: str | None = None
+    client_shards: int = 0
 
 
 class AFAResult(NamedTuple):
@@ -149,6 +166,20 @@ def afa_aggregate(
     upd32 = updates.astype(jnp.float32)
     mode = resolve_kernel_mode(config.use_kernels)
     interp = mode == "interpret"
+
+    if config.client_axis is not None and config.client_shards > 1:
+        # hierarchical two-stage screening: inputs are the shard-local row
+        # block inside a shard_map over config.client_axis
+        if config.variant != "iterative":
+            raise ValueError(
+                "sharded AFA implements the iterative variant only: the "
+                "gram variant needs O(K_local * K) gram rows per shard, "
+                "which defeats the client sharding; set variant='iterative' "
+                f"(got {config.variant!r})"
+            )
+        return _afa_aggregate_sharded(
+            updates, upd32, n_k, p_k, mask0, config, mode, interp
+        )
 
     if config.variant == "gram" and mode != "jnp" and config.kernel_launch == "fused":
         # the fused route: Algorithm 1 as ONE Pallas launch (gram +
@@ -223,6 +254,121 @@ def afa_aggregate(
     else:
         agg = (w @ upd32).astype(updates.dtype)
     return AFAResult(aggregate=agg, good_mask=mask, rounds=rounds, similarities=s)
+
+
+def _afa_aggregate_sharded(updates, upd32, n_k, p_k, mask0, config, mode, interp):
+    """Algorithm 1 across a shard_map client axis (matrix form, iterative).
+
+    All inputs carry the SHARD-LOCAL leading axis (K_local rows).  The
+    screening state — participation mask, p·n weights, similarities — is K
+    replicated scalars: stage 1 computes shard-local statistics (row norms,
+    the partial weighted aggregate, the local similarity dots), stage 2
+    reduces them with one (d,) ``psum`` + one tiled O(K)-scalar
+    ``all_gather`` per iteration and updates the mask replicated, identical
+    on every shard.  The O(K log K) screening statistics (the masked
+    mean/median/std need a sort of the gathered similarities) run on shard
+    0 ONLY and broadcast as a 3-scalar ``psum`` — the other shards
+    contribute exact zeros, so the summed stats are bitwise the shard-0
+    values; only the elementwise tail test replicates.
+    ``good_mask``/``similarities`` return SHARD-LOCAL
+    (the engine's trajectory stitches them back to (K,) via out_specs);
+    the aggregate returns replicated.
+
+    Under a kernel mode the per-iteration contractions run the PR-4 kernel
+    family per shard on the local row block (``weighted_sum`` for the
+    partial aggregate, ``cosine_sim`` against the replicated aggregate);
+    the PR-6 mega-kernel stays the single-shard fast path — its VMEM
+    screening loop is inherently whole-cohort, and with ``client_shards <=
+    1`` the dispatch above falls through to it unchanged.
+    """
+    axis = config.client_axis
+    K_local = upd32.shape[0]
+    K = K_local * config.client_shards
+    i = jax.lax.axis_index(axis)
+
+    row_norms_l = jnp.linalg.norm(upd32, axis=1)
+    n_g = jax.lax.all_gather(n_k.astype(jnp.float32), axis, tiled=True)
+    p_g = jax.lax.all_gather(p_k.astype(jnp.float32), axis, tiled=True)
+    mask0_g = jax.lax.all_gather(mask0, axis, tiled=True)
+
+    def _local(vec):
+        return jax.lax.dynamic_slice_in_dim(vec, i * K_local, K_local)
+
+    if mode != "jnp":
+
+        def sims(c):
+            k = _kernel_ops()
+            w_agg = jax.lax.psum(
+                k.weighted_sum(_local(c), upd32, interpret=interp), axis
+            )
+            s_l = k.cosine_sim(upd32, w_agg, interpret=interp)
+            return jax.lax.all_gather(s_l, axis, tiled=True)
+
+    else:
+
+        def sims(c):
+            w_agg = jax.lax.psum(_local(c) @ upd32, axis)  # (d,)
+            agg_norm = jnp.linalg.norm(w_agg)
+            s_l = (upd32 @ w_agg) / (
+                jnp.maximum(row_norms_l, EPS) * jnp.maximum(agg_norm, EPS)
+            )
+            return jax.lax.all_gather(s_l, axis, tiled=True)
+
+    def mark_bad_from_shard0(s, mask, xi):
+        # _mark_bad's tail test with the O(K log K) stats hoisted to shard 0:
+        # mean/median/std of the gathered (K,) similarities need a sort, and
+        # repeating that sort on every shard is pure waste (on emulated host
+        # devices it serializes x shards; on real chips it burns a core per
+        # chip for a scalar triple).  lax.cond runs only the taken branch and
+        # neither branch holds a collective, so the psum broadcast is safe —
+        # and exact: the other shards contribute 0.0, leaving the summed
+        # stats bitwise the shard-0 values.
+        def compute(_):
+            return jnp.stack([
+                masked_mean(s, mask),
+                masked_median(s, mask),
+                masked_std(s, mask, ddof=config.ddof),
+            ])
+        stats = jax.lax.psum(
+            jax.lax.cond(i == 0, compute,
+                         lambda _: jnp.zeros((3,), jnp.float32), None),
+            axis,
+        )
+        mu_hat, mu_bar, sigma = stats[0], stats[1], stats[2]
+        low_tail = mask & (s < mu_bar - xi * sigma)
+        high_tail = mask & (s > mu_bar + xi * sigma)
+        bad = jnp.where(mu_hat < mu_bar, low_tail, high_tail)
+        keep_floor = jnp.sum(mask & ~bad) >= 2
+        return jnp.where(keep_floor, bad, jnp.zeros_like(bad))
+
+    def cond(state):
+        mask, xi, changed, rounds, _ = state
+        return changed & (rounds < config.max_rounds)
+
+    def body(state):
+        mask, xi, _, rounds, _ = state
+        s = sims(_weights(mask, p_g, n_g))
+        bad = mark_bad_from_shard0(s, mask, xi)
+        return (mask & ~bad, xi + config.delta_xi, jnp.any(bad), rounds + 1, s)
+
+    s0 = (
+        sims(_weights(mask0_g, p_g, n_g)) if config.max_rounds == 0
+        else jnp.zeros((K,), jnp.float32)
+    )
+    mask, xi, _, rounds, s = jax.lax.while_loop(
+        cond, body,
+        (mask0_g, jnp.float32(config.xi0), jnp.bool_(True), jnp.int32(0), s0),
+    )
+    w_l = _local(_weights(mask, p_g, n_g))
+    if mode != "jnp":
+        part = _kernel_ops().weighted_sum(w_l, upd32, interpret=interp)
+    else:
+        part = w_l @ upd32
+    agg = jax.lax.psum(part, axis).astype(updates.dtype)
+    return AFAResult(
+        aggregate=agg, good_mask=_local(mask), rounds=rounds,
+        similarities=_local(s),
+    )
 
 
 # ---------------------------------------------------------------------------

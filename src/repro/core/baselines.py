@@ -320,7 +320,19 @@ def register_rule(
     return spec
 
 
-def _guard_all_blocked(res, mask):
+def _opts_client_axis(opts: RuleOptions) -> str | None:
+    """The shard_map client axis the options request, or None.
+
+    Reads ``opts.afa`` (an AFAConfig) without importing it: the axis only
+    matters when the config both names one and spans more than one shard —
+    a one-shard client mesh runs the unsharded code verbatim."""
+    cfg = opts.afa
+    axis = getattr(cfg, "client_axis", None) if cfg is not None else None
+    shards = getattr(cfg, "client_shards", 0) if cfg is not None else 0
+    return axis if (axis is not None and shards > 1) else None
+
+
+def _guard_all_blocked(res, mask, client_axis: str | None = None):
     """Post-dispatch guard for the empty-participation round.
 
     When every client is masked out (e.g. AFA eventually blocks the whole
@@ -331,10 +343,19 @@ def _guard_all_blocked(res, mask):
     returns an explicit zero *update* plus an ``all_blocked`` flag; engines
     keep the previous parameters when the flag is set.  When any client is
     live the ``where`` is the identity, bit for bit.
+
+    Under client sharding ``mask`` is the SHARD-LOCAL participation block, so
+    the emptiness test reduces over the client axis: a shard whose local
+    cohort is fully blocked must NOT zero its (replicated) copy of the
+    aggregate while other shards keep theirs — that would desynchronize the
+    model across shards.
     """
     if mask is None:
         return res._replace(all_blocked=jnp.bool_(False))
-    all_blocked = ~jnp.any(mask)
+    any_live = jnp.any(mask)
+    if client_axis is not None:
+        any_live = jax.lax.psum(any_live.astype(jnp.int32), client_axis) > 0
+    all_blocked = ~any_live
     aggregate = jax.tree_util.tree_map(
         lambda l: jnp.where(all_blocked, jnp.zeros_like(l), l), res.aggregate
     )
@@ -345,12 +366,22 @@ def dispatch_rule(name: str, updates, n_k, p_k=None, mask=None,
                   opts: RuleOptions = RuleOptions()):
     """Matrix-form dispatch: updates is (K, d).  Returns the rule's native
     result (``.aggregate`` vector + ``.good_mask`` + ``.all_blocked``, AFA
-    adds extras)."""
+    adds extras).  With a client axis in ``opts.afa`` (the sharded fused
+    engine), ``updates`` is the shard-local row block and only AFA — whose
+    hierarchical two-stage form exists — may dispatch."""
     try:
         spec = RULES[name]
     except KeyError:
         raise ValueError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
-    return _guard_all_blocked(spec.matrix_fn(updates, n_k, p_k, mask, opts), mask)
+    client_axis = _opts_client_axis(opts)
+    if client_axis is not None and name != "afa":
+        raise ValueError(
+            f"rule {name!r} has no client-sharded form; only 'afa' runs "
+            "hierarchically over a client mesh axis"
+        )
+    return _guard_all_blocked(
+        spec.matrix_fn(updates, n_k, p_k, mask, opts), mask, client_axis
+    )
 
 
 TREE_LAYOUTS = ("packed", "leaf")
@@ -389,6 +420,12 @@ def dispatch_rule_tree(name: str, stacked, n_k, p_k=None, mask=None,
 def _dispatch_tree_jit(stacked, n_k, p_k, mask, *, name: str,
                        opts: RuleOptions, layout: str = "packed"):
     spec = RULES[name]
+    if _opts_client_axis(opts) is not None:
+        raise ValueError(
+            "tree dispatch has no client-sharded form; the sharded engine "
+            "packs once and calls dispatch_rule on the local (K_local, D) "
+            "block"
+        )
     if layout == "leaf" and spec.tree_fn is not None:
         return _guard_all_blocked(spec.tree_fn(stacked, n_k, p_k, mask, opts), mask)
     if layout == "leaf":

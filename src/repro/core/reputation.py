@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 from jax.scipy.special import betainc
 
 
@@ -89,14 +90,18 @@ def gather_reputation(state: ReputationState, keep, pad_to: int) -> ReputationSt
     the result has ``pad_to`` entries on the client axis, with pad entries
     permanently blocked (``alpha = beta = 1`` keeps ``betainc`` finite, and
     ``blocked = True`` zeroes them out of every mask-driven computation).
-    Operates on the LAST axis so the vmapped seed sweep's ``(n_seeds, K)``
-    leaves compact with the same helper.
+    ``keep`` entries of ``-1`` are interleaved pad slots (the client-sharded
+    engine pads each shard's block tail, so pads are not end-only) and get
+    the same fills.  Operates on the LAST axis so the vmapped seed sweep's
+    ``(n_seeds, K)`` leaves compact with the same helper.
     """
     keep = jnp.asarray(keep, jnp.int32)
     pad = pad_to - keep.shape[0]
+    live = keep >= 0
 
     def take(leaf, fill):
-        out = jnp.take(leaf, keep, axis=-1)
+        out = jnp.take(leaf, jnp.maximum(keep, 0), axis=-1)
+        out = jnp.where(live, out, jnp.asarray(fill, out.dtype))
         if pad > 0:
             widths = [(0, 0)] * (out.ndim - 1) + [(0, pad)]
             out = jnp.pad(out, widths, constant_values=fill)
@@ -115,12 +120,15 @@ def scatter_reputation(
     """Re-embed a compacted posterior into the full-K layout (inverse of
     :func:`gather_reputation`; non-kept entries keep their pre-compaction
     values, which is exact because removed clients are blocked and blocking
-    freezes their posterior)."""
-    keep = jnp.asarray(keep, jnp.int32)
-    n = keep.shape[0]
+    freezes their posterior).  ``-1`` entries in ``keep`` are pad slots whose
+    compact columns carry no client and are dropped."""
+    keep = np.asarray(keep)
+    live = keep >= 0
+    idx = jnp.asarray(keep[live], jnp.int32)
+    sel = jnp.asarray(np.nonzero(live)[0], jnp.int32)
 
     def put(f, c):
-        return f.at[..., keep].set(c[..., :n])
+        return f.at[..., idx].set(jnp.take(c, sel, axis=-1))
 
     return ReputationState(
         alpha=put(full.alpha, compact.alpha),

@@ -11,6 +11,7 @@ from repro.data.sharding import (
     iid_shards,
     padded_stack,
     pow2_bucket,
+    shard_compact_plan,
 )
 
 __all__ = [
@@ -24,4 +25,5 @@ __all__ = [
     "padded_stack",
     "compact_stack",
     "pow2_bucket",
+    "shard_compact_plan",
 ]

@@ -53,16 +53,63 @@ def compact_stack(x_pad, y_pad, lengths, keep, pad_to: int | None = None):
     ``length = 1`` — the device batch draw is ``randint(0, length)``, which
     needs a non-empty range, and a pad row's gathered batch is all-zeros and
     masked out of every aggregate anyway.
+
+    ``keep`` entries of ``-1`` are *interleaved* pad slots: the sharded
+    segmented engine compacts each client shard independently, so pad rows
+    land at the tail of every shard's block, not only at the global tail
+    (see :func:`shard_compact_plan`).  A ``-1`` slot produces the same zero
+    shard / ``length = 1`` row an end-padding slot does.
+
+    Raises ``ValueError`` when ``pad_to`` is smaller than the number of kept
+    rows — silently truncating live clients would corrupt the simulation.
     """
     keep = np.asarray(keep, np.int64)
-    x_c, y_c = x_pad[keep], y_pad[keep]
-    len_c = np.asarray(lengths)[keep]
+    if pad_to is not None and pad_to < len(keep):
+        raise ValueError(
+            f"pad_to={pad_to} is smaller than the {len(keep)} kept client "
+            f"rows; refusing to truncate live clients"
+        )
+    live = keep >= 0
+    x_c = np.where(live[:, None, None], x_pad[np.maximum(keep, 0)], 0).astype(x_pad.dtype)
+    y_c = np.where(live[:, None], y_pad[np.maximum(keep, 0)], 0).astype(y_pad.dtype)
+    len_c = np.where(live, np.asarray(lengths)[np.maximum(keep, 0)], 1).astype(
+        np.asarray(lengths).dtype
+    )
     if pad_to is not None and pad_to > len(keep):
         extra = pad_to - len(keep)
         x_c = np.concatenate([x_c, np.zeros((extra,) + x_c.shape[1:], x_c.dtype)])
         y_c = np.concatenate([y_c, np.zeros((extra,) + y_c.shape[1:], y_c.dtype)])
         len_c = np.concatenate([len_c, np.ones((extra,), len_c.dtype)])
     return x_c, y_c, len_c
+
+
+def shard_compact_plan(live_ids, num_shards: int, cap_per_shard: int):
+    """Per-shard compaction layout for the client-sharded fused engine.
+
+    Distributes the still-live client ids contiguously across ``num_shards``
+    equal blocks of ``rows = pow2_bucket(ceil(n_live / num_shards),
+    cap_per_shard)`` rows each, padding every block's tail with ``-1``
+    sentinels.  Returns ``(keep (num_shards * rows,) int64 with -1 pads,
+    rows_per_shard)``.  Every shard gets the same row count (shard_map needs
+    equal blocks) and the count is a power-of-two bucket so the segment scan
+    re-traces only O(log K) times per shard — the sharded analogue of the
+    single-device ``pow2_bucket`` compaction.
+    """
+    live_ids = np.asarray(live_ids, np.int64)
+    n_live = len(live_ids)
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    rows = pow2_bucket(-(-max(n_live, 1) // num_shards), cap_per_shard)
+    if rows * num_shards < n_live:
+        raise ValueError(
+            f"{n_live} live clients do not fit {num_shards} shards of "
+            f"cap {cap_per_shard} rows"
+        )
+    keep = np.full((num_shards * rows,), -1, np.int64)
+    for s in range(num_shards):
+        chunk = live_ids[s * rows : (s + 1) * rows]
+        keep[s * rows : s * rows + len(chunk)] = chunk
+    return keep, rows
 
 
 def pow2_bucket(n_live: int, cap: int) -> int:

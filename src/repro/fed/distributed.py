@@ -1,12 +1,18 @@
 """Distributed federated round — the paper's technique as a pjit-able step.
 
 Maps AFA onto the production mesh (see DESIGN.md §4):
-  * clients ↔ *data*-axis rows (vmap mode), each holding a model replica
-    sharded over *model*; local SGD steps have no cross-client sync;
+  * clients ↔ rows of the dedicated *client* mesh axis when the mesh has
+    one (``client_row_axes``), falling back to the *data* axes on legacy
+    client-free meshes; each row holds a model replica sharded over
+    *model*; local SGD steps have no cross-client sync;
   * the robust aggregation IS the round's only collective: per-leaf partial
     dots lower to psum over *model*, the K-scalar while-loop is replicated,
-    and the weighted averaging is a weighted psum over *data* — the same
-    traffic class as the plain all-reduce FA would do.
+    and the weighted averaging is a weighted psum over the client rows —
+    the same traffic class as the plain all-reduce FA would do.
+  * the fused simulation engine (fed/engine.py) runs the explicit
+    hierarchical form of the same mapping: shard_map over the client axis,
+    shard-local Gram-free stats, and two O(K)-scalar/-(D,) collectives per
+    screening iteration (core/afa.py ``_afa_aggregate_sharded``).
 
 Three client-memory modes (cfg.fed_mode):
   * ``vmap``  — K proposals live simultaneously, K on the leading axis.
@@ -59,10 +65,12 @@ class FedRoundConfig(NamedTuple):
     proposal_dtype: str = "bfloat16"  # storage dtype in scan mode
     delta_block: float = 0.95
     microbatch: int = 1  # §Perf: gradient-accumulation chunks per local step
-    # mesh axes carrying the client dimension in vmap mode (e.g. ("data",) or
-    # ("pod","data")).  Needed so with_sharding_constraint inside the vmapped
-    # client closure survives batching (vmap drops constraints without
-    # spmd_axis_name).  None = plain vmap (single-device simulator/tests).
+    # mesh axes carrying the client dimension in vmap mode — the dedicated
+    # ("client",) axis when the mesh has one, else the data axes (("data",)
+    # or ("pod","data")); callers should derive this via
+    # launch.mesh.client_row_axes.  Needed so with_sharding_constraint inside
+    # the vmapped client closure survives batching (vmap drops constraints
+    # without spmd_axis_name).  None = plain vmap (single-device tests).
     client_axes: tuple | None = None
 
 
@@ -288,9 +296,17 @@ def compact_fed_batch(batch, n_k, rep: ReputationState, pad_to: int | None = Non
     at the compacted K (vmap mode holds every resident row's proposal, so
     dropping blocked rows is what stops paying FLOPs for them) and can
     scatter per-client outputs back through ``keep``.
+
+    Raises ``ValueError`` when ``pad_to`` is smaller than the live-client
+    count — silently truncating live clients would corrupt the round.
     """
     blocked = np.asarray(rep.blocked)
     keep = np.nonzero(~blocked)[0]
+    if pad_to is not None and pad_to < len(keep):
+        raise ValueError(
+            f"pad_to={pad_to} is smaller than the {len(keep)} live client "
+            f"rows; refusing to truncate live clients"
+        )
     pad_to = len(keep) if pad_to is None else pad_to
     pad = pad_to - len(keep)
     keep_j = jnp.asarray(keep, jnp.int32)

@@ -63,6 +63,19 @@ from repro.attacks import UPDATE_ATTACK_SCENARIOS, apply_update_attack
 from repro.fed.client import local_sgd
 from repro.utils.trees import tree_broadcast_clients, tree_select_rows
 
+# shard_map moved out of jax.experimental after 0.4.x; support both homes so
+# the pinned and latest CI lanes import the same symbol.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# scenarios whose proposal transform touches only its own client row — the
+# client-sharded engine requires this (alie/ipm compute cross-client moments
+# of the benign cohort, which would silently become shard-local under
+# shard_map; they stay on the single-device engines until made axis-aware)
+ROW_LOCAL_SCENARIOS = ("clean", "flipping", "noisy", "byzantine")
+
 
 class EngineConfig(NamedTuple):
     """Static (trace-time) knobs of the batched round step."""
@@ -292,6 +305,7 @@ def make_fused_sim(
     alpha0: float = 3.0,
     beta0: float = 3.0,
     agg_layout: str = "packed",
+    client_mesh=None,
 ):
     """Build the fused T-round simulation (DESIGN.md §2).
 
@@ -313,24 +327,71 @@ def make_fused_sim(
     (:func:`make_fused_segment` via ``SimConfig.segment_rounds``) to compact
     blocked clients out of the stack between segments (DESIGN.md §2).
 
+    With ``client_mesh`` (a mesh carrying a ``client`` axis,
+    ``launch/mesh.make_client_mesh``) the ENTIRE scan runs under
+    ``shard_map`` over that axis: data stacks, server state, and the packed
+    proposal buffer are sharded ``K / num_shards`` rows per device, params
+    and the test trajectory stay replicated, and AFA screens hierarchically
+    (``core/afa.py`` two-stage variant — O(K) scalars + one (D,) psum per
+    screening iteration; the full matrix is never gathered).  ``opts`` must
+    have been built with the matching ``client_axis``/``client_shards``
+    (``fed/server.make_rule_options`` does).  A one-shard mesh degenerates
+    to the unsharded code path bit for bit.
+
     Cached on the full static signature so repeated simulations (benchmark
     repeats, sweep construction) reuse the compiled scan.
     """
     if agg_layout not in AGG_LAYOUTS:
         raise ValueError(f"unknown agg_layout {agg_layout!r}; expected {AGG_LAYOUTS}")
+    _validate_client_mesh(client_mesh, cfg, rule, agg_layout, int(num_clients))
     return _make_fused_sim_cached(
         loss_fn, err_fn, cfg, rule, opts, float(delta_block),
         int(num_clients), int(num_rounds), int(batch_s), int(batch_b),
         tuple(bool(b) for b in np.asarray(bad_mask)), float(alpha0), float(beta0),
-        agg_layout,
+        agg_layout, client_mesh,
     )
+
+
+def _validate_client_mesh(mesh, cfg: EngineConfig, rule, agg_layout, num_rows):
+    """Shared host-side checks for the client-sharded fused engines."""
+    if mesh is None:
+        return
+    from repro.launch.mesh import client_axis
+
+    axis = client_axis(mesh)
+    if axis is None:
+        raise ValueError(
+            f"client_mesh has no client axis (axes: {mesh.axis_names})"
+        )
+    shards = int(mesh.shape[axis])
+    if shards > 1:
+        if cfg.scenario not in ROW_LOCAL_SCENARIOS:
+            raise ValueError(
+                f"scenario {cfg.scenario!r} is not row-local and cannot run "
+                f"client-sharded (supported: {ROW_LOCAL_SCENARIOS})"
+            )
+        if rule != "afa":
+            raise ValueError(
+                f"rule {rule!r} has no client-sharded form; only 'afa' "
+                "screens hierarchically over the client axis"
+            )
+        if agg_layout != "packed":
+            raise ValueError(
+                "the client-sharded engine packs once per round and "
+                f"requires agg_layout='packed' (got {agg_layout!r})"
+            )
+    if num_rows % shards != 0:
+        raise ValueError(
+            f"client rows ({num_rows}) must divide evenly over the "
+            f"{shards} client shards"
+        )
 
 
 @functools.lru_cache(maxsize=32)
 def _make_fused_sim_cached(
     loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
     num_clients, num_rounds, batch_s, batch_b, bad_tuple, alpha0, beta0,
-    agg_layout,
+    agg_layout, client_mesh=None,
 ):
     K = num_clients
     bad = jnp.asarray(bad_tuple)
@@ -343,21 +404,78 @@ def _make_fused_sim_cached(
     def round_fn(carry, rnd, seed, data: FusedData):
         return body(carry, rnd, seed, data, bad, ids)
 
-    @jax.jit
-    def scan_fn(params0, seed, data: FusedData):
-        from repro.fed.server import init_server_state
-
-        state0 = init_server_state(K, alpha0, beta0)
-        (params, state), traj = jax.lax.scan(
-            lambda c, r: round_fn(c, r, seed, data),
+    def _scan(params0, state0, seed, data, bad_rows, id_rows):
+        return jax.lax.scan(
+            lambda c, r: body(c, r, seed, data, bad_rows, id_rows),
             (params0, state0),
             jnp.arange(num_rounds, dtype=jnp.int32),
         )
+
+    if client_mesh is None:
+
+        @jax.jit
+        def scan_fn(params0, seed, data: FusedData):
+            from repro.fed.server import init_server_state
+
+            state0 = init_server_state(K, alpha0, beta0)
+            (params, state), traj = _scan(params0, state0, seed, data, bad, ids)
+            return params, state, traj
+
+        # the eager form is jit'd HERE, inside the cache, so repeated
+        # fused_eager simulations reuse its compile like the scan does
+        return scan_fn, jax.jit(round_fn)
+
+    from repro.launch.mesh import client_axis
+
+    axis = client_axis(client_mesh)
+    shards = int(client_mesh.shape[axis])
+    data_in, state_out, traj_out = _client_shard_specs(axis)
+
+    def shard_body(params0, seed, data, bad_rows, id_rows):
+        from repro.fed.server import init_server_state
+
+        # init is uniform per client, so building it at local width IS the
+        # shard's slice of the full-K initial state
+        state0 = init_server_state(K // shards, alpha0, beta0)
+        (params, state), traj = _scan(params0, state0, seed, data, bad_rows, id_rows)
         return params, state, traj
 
-    # the eager form is jit'd HERE, inside the cache, so repeated
-    # fused_eager simulations reuse its compile like the scan does
-    return scan_fn, jax.jit(round_fn)
+    P = jax.sharding.PartitionSpec
+    sharded = _shard_map(
+        shard_body, mesh=client_mesh,
+        in_specs=(P(), P(), data_in, P(axis), P(axis)),
+        out_specs=(P(), state_out, traj_out),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def scan_fn(params0, seed, data: FusedData):
+        return sharded(params0, jnp.asarray(seed, jnp.uint32), data, bad, ids)
+
+    # no eager per-round form for the sharded engine: the scan is the product
+    return scan_fn, None
+
+
+def _client_shard_specs(axis: str):
+    """(in, state-out, traj-out) PartitionSpec trees of the sharded engine:
+    client-leading leaves split over ``axis``, everything else replicated."""
+    from repro.fed.server import ServerState
+    from repro.core.reputation import ReputationState
+
+    P = jax.sharding.PartitionSpec
+    row = P(axis)
+    data_in = FusedData(
+        x=row, y=row, lengths=row, n_k=row, x_test=P(), y_test=P()
+    )
+    state_out = ServerState(
+        reputation=ReputationState(alpha=row, beta=row, blocked=row),
+        rounds_blocked=row,
+        round=P(),
+    )
+    traj_out = FusedTrajectory(
+        test_error=P(), good_mask=P(None, axis), blocked=P(None, axis)
+    )
+    return data_in, state_out, traj_out
 
 
 # ---------------------------------------------------------------------------
@@ -378,6 +496,8 @@ def make_fused_segment(
     batch_s: int,
     batch_b: int,
     agg_layout: str = "packed",
+    client_mesh=None,
+    bucket_rows: int | None = None,
 ):
     """Build one S-round segment of the fused simulation (DESIGN.md §2).
 
@@ -399,38 +519,98 @@ def make_fused_segment(
     Under ``agg_layout="packed"`` the proposal matrix the rules see is the
     single ``(K_bucket, D)`` packed buffer, so compaction's effect on the
     aggregation hot path is exactly a row-count change of one matrix.
+
+    With ``client_mesh`` the segment runs under ``shard_map`` over the
+    client axis like :func:`make_fused_sim`; the caller compacts PER SHARD
+    (``data/sharding.shard_compact_plan``): every shard holds
+    ``bucket_rows = K_bucket / num_shards`` rows, pad slots (``keep == -1``)
+    are interleaved at shard-block tails, and all arguments — including the
+    in/out ``ServerState`` — carry the global ``K_bucket`` layout that
+    shard_map splits/stitches.  ``bucket_rows`` must be passed for the
+    sharded form (it keys validation, the specs are shape-derived).
     """
     if agg_layout not in AGG_LAYOUTS:
         raise ValueError(f"unknown agg_layout {agg_layout!r}; expected {AGG_LAYOUTS}")
+    if client_mesh is not None and bucket_rows is None:
+        raise ValueError("the client-sharded segment needs bucket_rows")
+    _validate_client_mesh(
+        client_mesh, cfg, rule, agg_layout,
+        0 if client_mesh is None else int(bucket_rows) * _mesh_shards(client_mesh),
+    )
     return _make_fused_segment_cached(
         loss_fn, err_fn, cfg, rule, opts, float(delta_block),
         int(num_clients_total), int(seg_len), int(batch_s), int(batch_b),
-        agg_layout,
+        agg_layout, client_mesh,
     )
+
+
+def _mesh_shards(mesh) -> int:
+    from repro.launch.mesh import client_axis
+
+    axis = client_axis(mesh)
+    return int(mesh.shape[axis]) if axis is not None else 1
 
 
 @functools.lru_cache(maxsize=64)
 def _make_fused_segment_cached(
     loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
-    num_clients_total, seg_len, batch_s, batch_b, agg_layout,
+    num_clients_total, seg_len, batch_s, batch_b, agg_layout, client_mesh=None,
 ):
     body = functools.partial(
         _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block, agg_layout,
         num_clients_total, batch_s, batch_b,
     )
 
-    @jax.jit
-    def segment_fn(params, state, seed, data: FusedData, bad, client_ids, seg_start):
+    def _scan(params, state, seed, data, bad, client_ids, seg_start):
         rounds = (
             jnp.asarray(seg_start, jnp.int32)
             + jnp.arange(seg_len, dtype=jnp.int32)
         )
-        (params, state), traj = jax.lax.scan(
+        return jax.lax.scan(
             lambda c, r: body(c, r, seed, data, bad, client_ids),
             (params, state),
             rounds,
         )
+
+    if client_mesh is None:
+
+        @jax.jit
+        def segment_fn(params, state, seed, data: FusedData, bad, client_ids,
+                       seg_start):
+            (params, state), traj = _scan(
+                params, state, seed, data, bad, client_ids, seg_start
+            )
+            return params, state, traj
+
+        return segment_fn
+
+    from repro.launch.mesh import client_axis
+
+    axis = client_axis(client_mesh)
+    data_in, state_out, traj_out = _client_shard_specs(axis)
+    P = jax.sharding.PartitionSpec
+    row = P(axis)
+
+    def shard_body(params, state, seed, data, bad, client_ids, seg_start):
+        (params, state), traj = _scan(
+            params, state, seed, data, bad, client_ids, seg_start
+        )
         return params, state, traj
+
+    sharded = _shard_map(
+        shard_body, mesh=client_mesh,
+        in_specs=(P(), state_out, P(), data_in, row, row, P()),
+        out_specs=(P(), state_out, traj_out),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def segment_fn(params, state, seed, data: FusedData, bad, client_ids,
+                   seg_start):
+        return sharded(
+            params, state, jnp.asarray(seed, jnp.uint32), data, bad,
+            client_ids, jnp.asarray(seg_start, jnp.int32),
+        )
 
     return segment_fn
 

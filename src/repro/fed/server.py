@@ -114,13 +114,16 @@ def gather_server_state(state: ServerState, keep, pad_to: int) -> ServerState:
     ``keep`` is the segmented fused engine's index map of still-live clients;
     the result carries ``pad_to`` client entries, pads permanently blocked
     (``rounds_blocked = -1`` — a pad is never a real client, so it reads as
-    "never blocked").  The round counter stays absolute.  Leaf gathers act on
-    the LAST axis so vmapped sweep states ``(n_seeds, K)`` compact with the
-    same helper.
+    "never blocked").  ``-1`` entries in ``keep`` are interleaved pad slots
+    (per-shard compaction pads every shard block's tail) and gather the same
+    fills as end padding.  The round counter stays absolute.  Leaf gathers
+    act on the LAST axis so vmapped sweep states ``(n_seeds, K)`` compact
+    with the same helper.
     """
     keep = jnp.asarray(keep, jnp.int32)
     pad = pad_to - keep.shape[0]
-    rb = jnp.take(state.rounds_blocked, keep, axis=-1)
+    rb = jnp.take(state.rounds_blocked, jnp.maximum(keep, 0), axis=-1)
+    rb = jnp.where(keep >= 0, rb, jnp.int32(-1))
     if pad > 0:
         widths = [(0, 0)] * (rb.ndim - 1) + [(0, pad)]
         rb = jnp.pad(rb, widths, constant_values=-1)
@@ -137,20 +140,31 @@ def scatter_server_state(
     """Re-embed a compacted server state into the full-K layout (inverse of
     :func:`gather_server_state`).  Non-kept clients keep their pre-compaction
     entries — exact, because only blocked clients are ever dropped and
-    blocking freezes their posterior and bookkeeping."""
-    keep = jnp.asarray(keep, jnp.int32)
-    n = keep.shape[0]
+    blocking freezes their posterior and bookkeeping.  ``-1`` entries in
+    ``keep`` are pad slots and are dropped, mirroring the gather."""
+    keep_np = np.asarray(keep)
+    live = keep_np >= 0
+    idx = jnp.asarray(keep_np[live], jnp.int32)
+    sel = jnp.asarray(np.nonzero(live)[0], jnp.int32)
     return ServerState(
         reputation=scatter_reputation(full.reputation, compact.reputation, keep),
-        rounds_blocked=full.rounds_blocked.at[..., keep].set(
-            compact.rounds_blocked[..., :n]
+        rounds_blocked=full.rounds_blocked.at[..., idx].set(
+            jnp.take(compact.rounds_blocked, sel, axis=-1)
         ),
         round=compact.round,
     )
 
 
-def make_rule_options(cfg: ServerConfig, num_participants: int) -> RuleOptions:
+def make_rule_options(cfg: ServerConfig, num_participants: int, *,
+                      client_axis: str | None = None,
+                      client_shards: int = 0) -> RuleOptions:
     """Host-side knob bundle for the registry (hashable -> jit-static).
+
+    ``client_axis``/``client_shards`` mark the options for use INSIDE a
+    ``shard_map`` over a client mesh axis: AFA then runs its hierarchical
+    two-stage screening (core/afa.py) and the dispatch guard reduces the
+    all-blocked flag globally.  Both are static strings/ints so they key the
+    jit cache like every other knob.
 
     ``num_selected`` is populated only for the rule that consumes it (MKRUM)
     — it tracks the live participant count, and threading it into every
@@ -181,7 +195,8 @@ def make_rule_options(cfg: ServerConfig, num_participants: int) -> RuleOptions:
         use_kernels=mode,
         afa=AFAConfig(
             xi0=cfg.xi0, delta_xi=cfg.delta_xi, variant=cfg.afa_variant,
-            use_kernels=mode,
+            use_kernels=mode, client_axis=client_axis,
+            client_shards=client_shards,
         ),
     )
 

@@ -70,6 +70,7 @@ from repro.data import (
     iid_shards,
     padded_stack,
     pow2_bucket,
+    shard_compact_plan,
 )
 from repro.fed.client import local_sgd
 from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
@@ -117,6 +118,14 @@ class SimConfig:
     # segments when ``compact`` is set (0 = single scan, no compaction)
     segment_rounds: int = 0
     compact: bool = True
+    # fused engine only: > 0 runs the scan client-sharded under shard_map
+    # over a ``client`` mesh axis of this many devices (DESIGN.md §4) —
+    # data stacks, server state, and the packed proposal buffer split
+    # K / client_shards rows per device, AFA screens hierarchically, and
+    # (with segment_rounds) compaction is per shard.  1 is a valid value:
+    # a one-shard mesh runs the unsharded code inside shard_map, bit for
+    # bit (the parity tests use it).  0 = no mesh, today's path.
+    client_shards: int = 0
 
 
 @dataclasses.dataclass
@@ -249,6 +258,10 @@ def run_simulation(
     eval_every: int = 1,
 ) -> SimResult:
     setup = _Setup(data, sim)
+    if sim.client_shards > 0 and sim.engine != "fused":
+        raise ValueError(
+            f"client_shards requires engine='fused' (got {sim.engine!r})"
+        )
     if sim.engine == "batched":
         return _run_batched(setup, server_cfg, eval_every)
     if sim.engine == "looped":
@@ -421,13 +434,34 @@ def _fused_data(setup: _Setup) -> FusedData:
     )
 
 
-def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig):
+def _client_mesh(sim: SimConfig):
+    """The (client,) device mesh of a sharded run, or None (DESIGN.md §4)."""
+    if sim.client_shards <= 0:
+        return None
+    from repro.launch.mesh import make_client_mesh
+
+    return make_client_mesh(sim.client_shards)
+
+
+def _client_opts_kwargs(mesh) -> dict:
+    """make_rule_options kwargs marking the options for a client mesh."""
+    if mesh is None:
+        return {}
+    from repro.launch.mesh import client_axis
+
+    axis = client_axis(mesh)
+    return {"client_axis": axis, "client_shards": int(mesh.shape[axis])}
+
+
+def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig, mesh=None):
     """Fused scan + round body for this experiment's static configuration."""
     sim = setup.sim
     return make_fused_sim(
         dnn_loss, dnn_error, setup.engine_config(),
         rule=server_cfg.rule,
-        opts=make_rule_options(server_cfg, sim.num_clients),
+        opts=make_rule_options(
+            server_cfg, sim.num_clients, **_client_opts_kwargs(mesh)
+        ),
         delta_block=server_cfg.delta_block,
         num_clients=sim.num_clients,
         num_rounds=sim.rounds,
@@ -437,6 +471,7 @@ def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig):
         alpha0=server_cfg.alpha0,
         beta0=server_cfg.beta0,
         agg_layout=server_cfg.agg_layout,
+        client_mesh=mesh,
     )
 
 
@@ -444,8 +479,11 @@ def _run_fused(
     setup: _Setup, server_cfg: ServerConfig, eval_every: int, *, eager: bool = False
 ) -> SimResult:
     sim = setup.sim
+    mesh = _client_mesh(sim)
+    if eager and mesh is not None:
+        raise ValueError("fused_eager has no client-sharded form; use engine='fused'")
     data = _fused_data(setup)
-    scan_fn, round_fn = _make_setup_sim(setup, server_cfg)
+    scan_fn, round_fn = _make_setup_sim(setup, server_cfg, mesh)
 
     t_start = time.perf_counter()
     if eager:
@@ -490,20 +528,22 @@ def _run_fused(
 def _compact_inputs(setup: _Setup, kept: np.ndarray, bucket: int):
     """Gather the kept clients' device inputs into a ``bucket``-row layout.
 
-    ``kept`` is the ascending index map of still-live original client ids;
-    pad rows (``bucket - len(kept)``) carry zero shards of length 1, zero
-    ``n_k``, benign ``bad`` and id 0 — all inert, since their server-state
-    rows are blocked.
+    ``kept`` is the index map of still-live original client ids (ascending);
+    pad rows — the tail up to ``bucket``, plus any ``-1`` slots the per-shard
+    plan interleaved at shard-block tails — carry zero shards of length 1,
+    zero ``n_k``, benign ``bad`` and id 0 — all inert, since their
+    server-state rows are blocked.
     """
     x_pad, y_pad, lengths = _padded(setup)
+    kept = np.asarray(kept)
     x_c, y_c, len_c = compact_stack(x_pad, y_pad, lengths, kept, pad_to=bucket)
-    n_live = len(kept)
+    live = kept >= 0
     n_k_c = np.zeros((bucket,), np.float32)
-    n_k_c[:n_live] = setup.n_k[kept]
+    n_k_c[: len(kept)][live] = setup.n_k[kept[live]]
     bad_c = np.zeros((bucket,), bool)
-    bad_c[:n_live] = setup.bad_mask[kept]
+    bad_c[: len(kept)][live] = setup.bad_mask[kept[live]]
     ids_c = np.zeros((bucket,), np.uint32)
-    ids_c[:n_live] = kept
+    ids_c[: len(kept)][live] = kept[live]
     data = FusedData(
         x=jnp.asarray(x_c),
         y=jnp.asarray(y_c),
@@ -515,20 +555,25 @@ def _compact_inputs(setup: _Setup, kept: np.ndarray, bucket: int):
     return data, jnp.asarray(bad_c), jnp.asarray(ids_c)
 
 
-def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int):
+def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int,
+                mesh=None, bucket_rows: int | None = None):
     """Segment scan for this experiment's static configuration (cached in
     ``make_fused_segment`` — one trace per (bucket shape, seg_len))."""
     sim = setup.sim
     return make_fused_segment(
         dnn_loss, dnn_error, setup.engine_config(),
         rule=server_cfg.rule,
-        opts=make_rule_options(server_cfg, sim.num_clients),
+        opts=make_rule_options(
+            server_cfg, sim.num_clients, **_client_opts_kwargs(mesh)
+        ),
         delta_block=server_cfg.delta_block,
         num_clients_total=sim.num_clients,
         seg_len=seg_len,
         batch_s=setup.batch_s,
         batch_b=setup.batch_b,
         agg_layout=server_cfg.agg_layout,
+        client_mesh=mesh,
+        bucket_rows=bucket_rows,
     )
 
 
@@ -547,9 +592,19 @@ def _run_fused_segmented(
     were mask-zeroed in every reduction, the stitched trajectory is
     bit-identical to the one-shot fused scan — but post-blocking segments pay
     client FLOPs only for ~K_live rows.
+
+    Client-sharded (``sim.client_shards > 0``): compaction is PER SHARD —
+    the live ids redistribute contiguously over equal power-of-two shard
+    blocks (``data/sharding.shard_compact_plan``), pad slots (``kept ==
+    -1``) interleave at shard-block tails, and the segment runs under
+    shard_map over the client mesh.  Multi-shard trajectories agree with
+    the single-device run numerically (the (D,) psum re-associates one
+    summation); a one-shard mesh is bit-identical.
     """
     sim = setup.sim
     K, T, S = sim.num_clients, sim.rounds, sim.segment_rounds
+    mesh = _client_mesh(sim)
+    n_shards = max(sim.client_shards, 1) if mesh is not None else 1
     seed = jnp.uint32(sim.seed)
 
     test_error = np.zeros((T,), np.float64)
@@ -573,20 +628,29 @@ def _run_fused_segmented(
         seg_len = min(S, T - seg_start)
         if sim.compact:
             blocked_c = np.asarray(state_c.reputation.blocked)[: len(kept)]
-            live = kept[~blocked_c]
+            # pad slots (kept == -1, sharded layout) are blocked and drop out
+            live = kept[~blocked_c & (kept >= 0)]
         else:
             live = np.arange(K)
-        new_bucket = pow2_bucket(len(live), K)
+        if mesh is None:
+            new_bucket, new_kept = pow2_bucket(len(live), K), live
+        else:
+            # per-shard compaction: equal pow2 blocks, -1 pads at block tails
+            new_kept, rows = shard_compact_plan(live, n_shards, K // n_shards)
+            new_bucket = rows * n_shards
         if bucket != new_bucket:
             # bucket boundary crossed: preserve the rows being dropped, then
             # compact to the smaller layout (the first iteration lands here
             # too, with the identity map at bucket = K and nothing to save)
             if bucket is not None:
                 state_full = scatter_server_state(state_full, state_c, kept)
-            bucket, kept = new_bucket, live
+            bucket, kept = new_bucket, new_kept
             data_c, bad_c, ids_c = _compact_inputs(setup, kept, bucket)
             state_c = gather_server_state(state_full, kept, bucket)
-        seg_fn = _segment_fn(setup, server_cfg, seg_len)
+        seg_fn = _segment_fn(
+            setup, server_cfg, seg_len, mesh,
+            None if mesh is None else bucket // n_shards,
+        )
         params, state_c, traj = seg_fn(
             params, state_c, seed, data_c, bad_c, ids_c, jnp.int32(seg_start)
         )
@@ -596,8 +660,11 @@ def _run_fused_segmented(
         # the index map; dropped clients keep the default good_mask = False
         # (they are blocked, exactly what the one-shot scan emits for them)
         end = seg_start + seg_len
+        valid = kept >= 0
         test_error[seg_start:end] = np.asarray(traj.test_error, np.float64)
-        good[seg_start:end, kept] = np.asarray(traj.good_mask)[:, : len(kept)]
+        good[seg_start:end, kept[valid]] = (
+            np.asarray(traj.good_mask)[:, np.nonzero(valid)[0]]
+        )
         round_times[seg_start:end] = (time.perf_counter() - t0) / seg_len
         seg_start = end
 
@@ -647,6 +714,11 @@ def run_sweep(
     unsegmented run).
     """
     setup = _Setup(data, sim)
+    if sim.client_shards > 0:
+        raise ValueError(
+            "run_sweep is not wired for the client-sharded engine; "
+            "set client_shards=0 for sweeps"
+        )
     if sim.segment_rounds > 0:
         return _run_sweep_segmented(setup, server_cfg, seeds)
     fdata = _fused_data(setup)

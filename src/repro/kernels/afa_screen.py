@@ -37,6 +37,17 @@ Two launch geometries, selected by ``ops.afa_screen``:
   TPU's sequential grid keeps resident across all iterations.  Requires the
   sequential-grid guarantee — TPU / interpret only.
 
+Client-sharded engine (DESIGN.md §4): this mega-kernel is the SINGLE-SHARD
+fast path.  The fused screening loop is inherently global — it needs every
+client's similarity in one place for the masked median/std tail test — so
+the client-sharded route (``core/afa._afa_aggregate_sharded``) cannot call
+it per shard.  That route instead runs the hierarchical decomposition:
+per-shard ``weighted_sum`` / ``cosine_sim`` kernel launches (the PR 4
+primitives, operating on the shard-local ``(K/S, D)`` block) plus two
+O(K)-scalar/-(D,) collectives per screening iteration, with the replicated
+``_mark_bad`` loop on gathered scalars.  At shard count 1 the sharded
+dispatch is bypassed entirely and this kernel runs unchanged.
+
 Bitwise contract (the parity suite's strongest assertion): every float op
 below mirrors the jnp reference in ``core/afa.py`` + ``core/stats.py`` —
 same primitives, same operand order, same EPS clamps.  The only intentional

@@ -43,6 +43,13 @@ Selection has two inputs, resolved by :func:`resolve_kernel_mode`:
 the trace — the rules take the resolved mode as a static argument, so two
 calls with different resolved modes compile separately and never collide in
 the jit cache.
+
+Under the client-sharded fused engine every kernel mode applies PER SHARD:
+each shard's ``shard_map`` body sees only its ``(K/S, D)`` block, so the
+compiled/interpreted kernels launch on shard-local operands (weighted-sum
+and cosine-sim primitives), while the fused AFA screening mega-kernel —
+which needs the global similarity vector — remains the shard-count-1 fast
+path (see ``kernels/afa_screen.py`` and ``core/afa.py``).
 """
 
 from __future__ import annotations

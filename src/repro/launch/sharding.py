@@ -8,7 +8,9 @@ Parameter rules (name-based, applied per leaf):
   * MoE expert dim                   -> *model*   (expert parallelism)
   * mamba in/out projection features -> *model*
   * 1-D params (norms, biases, A_log)-> replicated
-  * vmap-mode stacked client axis    -> client rows = ('pod','data')
+  * vmap-mode stacked client axis    -> client rows = the dedicated
+    'client' axis when the mesh has one, else ('pod','data')
+    (``client_row_axes``)
   * FSDP (scan/remat modes): the largest remaining unsharded dim
     additionally -> ('pod','data')
 
@@ -22,7 +24,7 @@ import numpy as np
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import client_row_axes, data_axes
 
 
 def _axis_size(mesh, axes) -> int:
@@ -88,14 +90,16 @@ def param_pspec(
 
     num_stack_axes: leading axes added by layer-stacking (1 for scanned layer
     stacks, 0 for shared/unstacked params).  client_axis: an additional
-    leading client axis (vmap fed mode) sharded over the data axes.
+    leading client axis (vmap fed mode) sharded over the mesh's client rows
+    (the dedicated 'client' axis when present, else the data axes).
     """
     daxes = data_axes(mesh)
+    caxes = client_row_axes(mesh)
     spec: list = [None] * len(shape)
     off = 0
     if client_axis:
-        if _divisible(shape[0], mesh, daxes):
-            spec[0] = daxes
+        if caxes and _divisible(shape[0], mesh, caxes):
+            spec[0] = caxes
         off += 1
     off += num_stack_axes  # layer-stack axes stay unsharded
 
@@ -104,7 +108,9 @@ def param_pspec(
     mdim, _ = _model_dim_for(pstr)
     if is_moe and pstr.split("/")[-1] in ("gate", "up", "down"):
         mdim = 0  # expert dim leads the body for stacked moe weights
-    used_data = client_axis
+    # when clients live on their own dedicated axis the data axes stay free
+    # for FSDP; the legacy clients-on-data-rows mapping consumes them
+    used_data = client_axis and caxes == daxes
     if mdim is not None and len(body) > mdim and body[mdim] >= 2:
         if _divisible(body[mdim], mesh, "model"):
             spec[off + mdim] = "model"
@@ -145,13 +151,16 @@ def shard_params_tree(shapes_tree, mesh, *, client_axis=False, fsdp=False,
 
 
 def batch_pspec(shape: tuple, mesh, *, client_axis: bool, per_client_batch: bool) -> P:
-    """Fed batch leaves (K, S, b, ...) or plain batch (B, ...)."""
+    """Fed batch leaves (K, S, b, ...) or plain batch (B, ...).  The leading
+    client dim shards over the mesh's client rows (dedicated 'client' axis
+    when present, else data axes); a plain batch shards over data axes."""
     daxes = data_axes(mesh)
     spec: list = [None] * len(shape)
     if client_axis:
-        if _divisible(shape[0], mesh, daxes):
-            spec[0] = daxes
-    elif shape and _divisible(shape[0], mesh, daxes):
+        caxes = client_row_axes(mesh)
+        if caxes and _divisible(shape[0], mesh, caxes):
+            spec[0] = caxes
+    elif shape and daxes and _divisible(shape[0], mesh, daxes):
         spec[0] = daxes
     return P(*spec)
 

@@ -14,7 +14,7 @@ from repro.launch.specs import LOCAL_STEPS, fed_client_count
 def make_train_step(model, mesh, *, afa_variant: str = "iterative",
                     lr: float = 0.02, proposal_dtype: str = "bfloat16",
                     local_steps: int = LOCAL_STEPS, microbatch: int = 1):
-    from repro.launch.mesh import data_axes
+    from repro.launch.mesh import client_row_axes
 
     cfg = model.config
     K = fed_client_count(cfg, mesh)
@@ -26,7 +26,9 @@ def make_train_step(model, mesh, *, afa_variant: str = "iterative",
         mode=cfg.fed_mode,
         proposal_dtype=proposal_dtype,
         microbatch=microbatch,
-        client_axes=data_axes(mesh) if cfg.fed_mode == "vmap" else None,
+        # vmap mode: clients ride the dedicated client axis when the mesh has
+        # one, else the legacy data-axes mapping (client_row_axes)
+        client_axes=(client_row_axes(mesh) or None) if cfg.fed_mode == "vmap" else None,
     )
     return make_fed_round(model, fr_cfg)
 

@@ -73,3 +73,78 @@ def test_sharded_fed_round_matches_single_device():
     )
     assert out.returncode == 0, out.stdout + out.stderr
     assert "EQUIVALENT" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# client-sharded fused engine: trajectory parity under a 4-way client mesh
+# ---------------------------------------------------------------------------
+
+FUSED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.data import make_spambase_like
+from repro.fed.simulator import SimConfig, run_simulation
+from repro.fed.server import ServerConfig
+
+K = 20
+data = make_spambase_like(n_train=640, n_test=200, dim=24, seed=0)
+
+
+def run(shards, seg=0):
+    # bad_frac = 0.4: all 8 attackers get blocked, shrinking the live set to
+    # 12 and the per-shard power-of-two bucket from 5 to 4 rows — the -1
+    # padded per-shard compaction runs mid-simulation
+    sim = SimConfig(
+        num_clients=K, bad_frac=0.4, scenario="byzantine", rounds=16,
+        local_epochs=1, batch_size=16, hidden=(8,), engine="fused",
+        segment_rounds=seg, compact=seg > 0, client_shards=shards, seed=0,
+    )
+    cfg = ServerConfig(rule="afa", num_clients=K)
+    return run_simulation(data, sim, cfg)
+
+
+ref = run(0)                 # today's single-device one-shot fused scan
+blocked = np.asarray(ref.blocked_round)
+assert (blocked > 0).sum() >= 8, f"attack did not block: {blocked}"
+
+# shard count 1 must degenerate to the unsharded code path bit for bit
+one = run(1)
+assert np.array_equal(ref.test_error, one.test_error), "1-shard error drifted"
+assert np.array_equal(
+    np.stack(ref.good_mask_history), np.stack(one.good_mask_history)
+)
+assert np.array_equal(ref.blocked_round, one.blocked_round)
+print("ONE_SHARD_BIT_IDENTICAL")
+
+# 4-way client mesh, segmented with per-shard compaction: numerically equal
+# trajectories (the (D,) psum re-associates one summation; every discrete
+# outcome — screening masks, blocking rounds — must match exactly)
+four = run(4, seg=4)
+np.testing.assert_allclose(
+    np.asarray(ref.test_error), np.asarray(four.test_error),
+    rtol=1e-4, atol=1e-4,
+)
+assert np.array_equal(
+    np.stack(ref.good_mask_history), np.stack(four.good_mask_history)
+), "4-shard screening masks drifted"
+assert np.array_equal(ref.blocked_round, four.blocked_round)
+print("FOUR_SHARD_EQUIVALENT")
+"""
+
+
+def test_client_sharded_fused_trajectory_parity():
+    """Fused-scan run under a 4-way client mesh (hierarchical two-stage AFA
+    + per-shard compaction) agrees numerically with the single-device
+    engine; a 1-shard mesh is bit-identical.  Includes blocking + bucket
+    shrink rounds."""
+    assert len(jax.devices()) == 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", FUSED_SCRIPT], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ONE_SHARD_BIT_IDENTICAL" in out.stdout
+    assert "FOUR_SHARD_EQUIVALENT" in out.stdout
