@@ -443,33 +443,6 @@ KERNEL_D = 2048
 KERNEL_ROUNDS = 8
 
 
-def _count_pallas_launches(fn, *args) -> int:
-    """Number of pallas_call eqns in fn's jaxpr, sub-jaxprs included."""
-    try:
-        from jax.extend.core import ClosedJaxpr, Jaxpr
-    except ImportError:  # older jax
-        from jax.core import ClosedJaxpr, Jaxpr
-    import jax
-
-    def subjaxprs(val):
-        if isinstance(val, ClosedJaxpr):
-            return [val.jaxpr]
-        if isinstance(val, Jaxpr):
-            return [val]
-        if isinstance(val, (list, tuple)):
-            return [j for v in val for j in subjaxprs(v)]
-        return []
-
-    def count(jx) -> int:
-        n = 0
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for val in eqn.params.values():
-                n += sum(count(sub) for sub in subjaxprs(val))
-        return n
-
-    return count(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
 def run_kernel(tiny: bool = False) -> tuple[list[dict], list[dict]]:
@@ -523,16 +496,18 @@ def run_kernel(tiny: bool = False) -> tuple[list[dict], list[dict]]:
                 np.asarray(res["fused"].similarities),
                 np.asarray(res["jnp"].similarities))
             assert int(res["fused"].rounds) == int(res["jnp"].rounds)
-        launches = {
-            name: _count_pallas_launches(
-                lambda u_, n_, p_, c=c: afa_aggregate(u_, n_, p_, config=c),
-                u, n_k, p_k)
-            for name, c in cfgs.items()
-        }
-        assert launches["fused"] == 1, \
-            f"fused route must be ONE pallas launch, got {launches['fused']}"
-        assert launches["chained"] >= 2, launches
-        assert launches["jnp"] == 0, launches
+        from repro.analysis import LaunchBudget, count_pallas_launches
+        from repro.analysis.launches import assert_launch_budget
+
+        budgets = {"jnp": LaunchBudget(exact=0),
+                   "chained": LaunchBudget(min=2),
+                   "fused": LaunchBudget(exact=1)}
+        launches = {}
+        for name, c in cfgs.items():
+            route = lambda u_, n_, p_, c=c: afa_aggregate(u_, n_, p_, config=c)
+            assert_launch_budget(route, u, n_k, p_k, budget=budgets[name],
+                                 target=f"afa[{name}]")
+            launches[name] = count_pallas_launches(route, u, n_k, p_k)
         times = {}
         for name, c in cfgs.items():
             t = float("inf")

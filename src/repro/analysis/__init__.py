@@ -1,0 +1,62 @@
+"""Static jaxpr/HLO invariant linter for the aggregation stack.
+
+``repro.analysis`` traces (never lowers or executes, with the one documented
+exception of the retrace auditor's tiny host probes) the registered
+aggregation entry points and statically verifies the repo's hardest-won
+program invariants at the jaxpr/HLO level:
+
+* :mod:`repro.analysis.races` — Pallas grid-race detector: reconstructs every
+  ``pallas_call`` output's ``index_map`` across grid steps and flags blocks
+  revisited with read-modify-write semantics when the target backend runs the
+  grid in parallel, cross-checked against the kernel's declared geometry
+  (:mod:`repro.kernels.meta`).
+* :mod:`repro.analysis.launches` — launch-count checker with declarative
+  per-rule budgets (fused AFA = exactly 1 ``pallas_call``).
+* :mod:`repro.analysis.collectives` — collective-budget checker for the
+  sharded screening loop (≤ 1 heavy psum + 1 heavy all_gather per iteration).
+* :mod:`repro.analysis.retrace` — jit retrace auditor (O(log K) pow2-bucket
+  bound; repeat-sweep drift detection).
+* :mod:`repro.analysis.transfers` — host-transfer detector for scan/while
+  bodies (no callbacks / device transfers inside the fused round loop).
+* :mod:`repro.analysis.hlo` — trip-scaled post-compile HLO roofline analysis
+  (absorbs the former ``repro.launch.hlo_analysis``).
+
+CLI: ``python -m repro.analysis.lint`` runs the full rule-registry × kernel
+-mode matrix and emits a JSON + markdown report (see DESIGN.md).
+"""
+
+from repro.analysis.collectives import (
+    CollectiveBudget,
+    CollectiveUse,
+    check_screening_budget,
+    collective_uses,
+    while_body_collectives,
+)
+from repro.analysis.launches import (
+    LaunchBudget,
+    check_launch_budget,
+    count_pallas_launches,
+    pallas_launch_names,
+)
+from repro.analysis.races import analyze_pallas_races
+from repro.analysis.report import Finding, Report
+from repro.analysis.retrace import audit_jit_cache, pow2_bucket_bound
+from repro.analysis.transfers import check_no_host_transfers
+
+__all__ = [
+    "CollectiveBudget",
+    "CollectiveUse",
+    "Finding",
+    "LaunchBudget",
+    "Report",
+    "analyze_pallas_races",
+    "audit_jit_cache",
+    "check_launch_budget",
+    "check_no_host_transfers",
+    "check_screening_budget",
+    "collective_uses",
+    "count_pallas_launches",
+    "pallas_launch_names",
+    "pow2_bucket_bound",
+    "while_body_collectives",
+]

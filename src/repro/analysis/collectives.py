@@ -1,0 +1,146 @@
+"""Collective-budget checker for the sharded screening loop.
+
+PR 7's contract lives here as a machine-checked budget instead of prose: the
+client-sharded AFA screening iteration moves **one heavy all-reduce** (the
+``(D,)`` partial-aggregate psum) and **one heavy all-gather** (the O(K)
+per-client similarity exchange) per ``while`` iteration — plus O(1)-sized
+scalar statistics collectives, which are free at the wire level and
+explicitly excluded from the heavy budget by an element-count threshold.
+
+Collectives are found at the jaxpr level (the ``shard_map`` body traces to
+``psum`` / ``all_gather`` / ... primitive eqns), so the check runs on a CPU
+host with ``--xla_force_host_platform_device_count`` and never lowers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.analysis.jaxpr_utils import (
+    as_jaxpr,
+    aval_elements,
+    iter_eqns,
+    subjaxprs,
+    trace,
+)
+from repro.analysis.report import Finding, error
+
+# Exact jaxpr primitive names (``psum`` must not match ``reduce_sum``, and
+# ``all_gather`` must not match ``gather``).
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum",
+    "all_gather",
+    "all_to_all",
+    "ppermute",
+    "psum_scatter",
+    "pmax",
+    "pmin",
+    "pgather",
+})
+
+
+class CollectiveUse(NamedTuple):
+    """One collective eqn: primitive name + result element count."""
+
+    primitive: str
+    elements: int
+
+
+class CollectiveBudget(NamedTuple):
+    """Per-screening-iteration budget on *heavy* collectives.
+
+    A collective is heavy when its result carries more than
+    ``scalar_elements`` elements; smaller ones are O(1) statistics traffic
+    (e.g. the 3-element mean/var/count psum) and are not budgeted.
+    """
+
+    max_heavy_psum: int = 1
+    max_heavy_all_gather: int = 1
+    scalar_elements: int = 64
+
+    def is_heavy(self, use: CollectiveUse) -> bool:
+        return use.elements > self.scalar_elements
+
+
+def _uses_in(jaxpr: Any) -> list[CollectiveUse]:
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name in COLLECTIVE_PRIMITIVES:
+            n = max(
+                (aval_elements(v) for v in eqn.outvars), default=0
+            )
+            out.append(CollectiveUse(eqn.primitive.name, n))
+    return out
+
+
+def collective_uses(fn_or_jaxpr: Any, *args: Any) -> list[CollectiveUse]:
+    """Every collective eqn reachable from the entry point (traced, never
+    executed), sub-jaxprs included."""
+    jx = trace(fn_or_jaxpr, *args) if callable(fn_or_jaxpr) else fn_or_jaxpr
+    return _uses_in(jx)
+
+
+def while_body_collectives(fn_or_jaxpr: Any, *args: Any) -> list[list[CollectiveUse]]:
+    """Per-``while``-loop collective uses: one list per while eqn found
+    (recursively), each covering that loop's body jaxpr.  The screening
+    loop's per-iteration budget is checked against these."""
+    jx = trace(fn_or_jaxpr, *args) if callable(fn_or_jaxpr) else fn_or_jaxpr
+    bodies = []
+    for eqn in iter_eqns(jx):
+        if eqn.primitive.name == "while":
+            body = eqn.params.get("body_jaxpr")
+            for sub in subjaxprs(body):
+                bodies.append(_uses_in(sub))
+    return bodies
+
+
+def check_screening_budget(
+    fn_or_jaxpr: Any,
+    *args: Any,
+    budget: CollectiveBudget = CollectiveBudget(),
+    target: str = "<anonymous>",
+) -> list[Finding]:
+    """Check every while-loop body against the per-iteration heavy budget.
+
+    One ``error`` finding per violating loop.  A trace with no while loop at
+    all also errors — the screening loop went missing, which would silently
+    vacuate the budget claim.
+    """
+    jx = trace(fn_or_jaxpr, *args) if callable(fn_or_jaxpr) else fn_or_jaxpr
+    jx = as_jaxpr(jx) if not callable(fn_or_jaxpr) else jx
+    bodies = while_body_collectives(jx)
+    if not bodies:
+        return [error(
+            "collective-budget", target,
+            "no while loop found in the trace — cannot audit the "
+            "per-screening-iteration collective budget",
+        )]
+    findings: list[Finding] = []
+    for i, uses in enumerate(bodies):
+        heavy = [u for u in uses if budget.is_heavy(u)]
+        n_psum = sum(1 for u in heavy if u.primitive == "psum")
+        n_ag = sum(1 for u in heavy if u.primitive == "all_gather")
+        n_other = [u for u in heavy if u.primitive not in ("psum", "all_gather")]
+        if n_psum > budget.max_heavy_psum:
+            findings.append(error(
+                "collective-budget", target,
+                f"while body {i}: {n_psum} heavy psum(s) per screening "
+                f"iteration exceeds the budget of {budget.max_heavy_psum} "
+                f"(heavy = > {budget.scalar_elements} elements; uses: "
+                f"{[u for u in heavy if u.primitive == 'psum']})",
+            ))
+        if n_ag > budget.max_heavy_all_gather:
+            findings.append(error(
+                "collective-budget", target,
+                f"while body {i}: {n_ag} heavy all_gather(s) per screening "
+                f"iteration exceeds the budget of "
+                f"{budget.max_heavy_all_gather}",
+            ))
+        if n_other:
+            findings.append(error(
+                "collective-budget", target,
+                f"while body {i}: unbudgeted heavy collective(s) "
+                f"{sorted(set(u.primitive for u in n_other))} in the "
+                "screening iteration",
+            ))
+    return findings

@@ -1,0 +1,242 @@
+"""Post-compile HLO analysis for the roofline report and lint budgets.
+
+(Absorbed from ``repro.launch.hlo_analysis``, which remains as a re-export
+shim; the trip-scaled multipliers here also back the HLO-level side of the
+collective-budget lint.)
+
+XLA's ``cost_analysis()`` counts a while/scan body ONCE (verified: an 8-layer
+scanned stack reports 1/8 the unrolled FLOPs), so raw numbers undercount
+scanned models.  This module re-derives trip-scaled quantities directly from
+``compiled.as_text()``:
+
+  1. split the HLO module into computations;
+  2. build a **call multiplier** per computation: ENTRY = 1; a `while` op
+     with ``backend_config.known_trip_count.n = N`` multiplies its body (and
+     condition) by N; fusions / calls / reduces propagate their parent's
+     multiplier;
+  3. collective bytes  = Σ over all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute ops of max(operand, result) bytes ×
+     multiplier (wire-byte proxy; per-type breakdown reported);
+  4. dot FLOPs = Σ over dot ops of 2 · |out| · K × multiplier, with K from
+     the lhs contracting dims — matmul-dominated models make this a tight
+     lower bound on true executed FLOPs;
+  5. HBM-traffic proxy = Σ over top-level non-trivial ops of (result bytes +
+     parameter-operand bytes) × multiplier (assumes fusions materialize
+     their results; intra-fusion traffic invisible, documented).  ALL
+     operands are counted — operand tokens that are computation references
+     rather than values resolve to 0 bytes via the symbol table, so no
+     operand cap is needed (an earlier revision truncated to the first 8
+     operands, silently undercounting wide fusions).
+
+All byte counts are GLOBAL (whole mesh); divide by chip count for per-chip.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, incl. tuples: sums every array leaf."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_RE = re.compile(r"([\w\-]+)\((.*)$")
+_CALL_REFS = re.compile(r"(?:body|calls|to_apply|branch_computations)=\{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}?")
+_COND_REF = re.compile(r"condition=%?([\w.\-]+)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """computation name -> body text."""
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and ("->" in line) and ("{" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if m:
+                cur_name = m.group(1)
+                cur_lines = []
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur_name
+        elif line.startswith("}"):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+        elif cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def parse_instructions(body: str):
+    """Yield dicts: name, type, op, rest (the text after the open paren).
+
+    Hand-rolled because HLO tuple types embed ``/*index=N*/`` comments that
+    break any '=' -based regex split."""
+    for line in body.splitlines():
+        line = line.strip()
+        if line.startswith("ROOT "):
+            line = line[5:]
+        if not line.startswith("%"):
+            continue
+        name, sep, rest = line.partition(" = ")
+        if not sep:
+            continue
+        if rest.startswith("("):  # tuple type: find matching close paren
+            depth = 0
+            end = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            typ, rem = rest[: end + 1], rest[end + 1 :].strip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            typ, rem = rest[:sp], rest[sp + 1 :].strip()
+        m = _OP_RE.match(rem)
+        if not m:
+            continue
+        yield {
+            "name": name.lstrip("%"),
+            "type": typ,
+            "op": m.group(1),
+            "rest": m.group(2),
+        }
+
+
+def computation_multipliers(hlo: str, comps: dict[str, str]) -> dict[str, float]:
+    entry = comps.get("__entry__")
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    # iterate to fixed point (call graph is a DAG; a few passes suffice)
+    for _ in range(64):
+        changed = False
+        for cname, body in comps.items():
+            if cname == "__entry__" or mult.get(cname, 0.0) == 0.0:
+                continue
+            m_parent = mult[cname]
+            for ins in parse_instructions(body):
+                line = ins["rest"]
+                trip = 1.0
+                if ins["op"] == "while":
+                    t = _TRIP.search(line)
+                    trip = float(t.group(1)) if t else 1.0
+                    refs = []
+                    b = re.search(r"body=%?([\w.\-]+)", line)
+                    c = _COND_REF.search(line)
+                    if b:
+                        refs.append((b.group(1), trip))
+                    if c:
+                        refs.append((c.group(1), trip + 1))
+                else:
+                    refs = []
+                    for mm in _CALL_REFS.finditer(line):
+                        for r in mm.group(1).split(","):
+                            refs.append((r.strip().lstrip("%"), 1.0))
+                for ref, k in refs:
+                    want = m_parent * k
+                    if mult.get(ref, 0.0) < want:
+                        mult[ref] = want
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def analyze(hlo: str) -> dict:
+    comps = split_computations(hlo)
+    mult = computation_multipliers(hlo, comps)
+    # symbol table per computation: op name -> type string
+    coll_bytes = defaultdict(float)
+    coll_counts = defaultdict(float)
+    dot_flops = 0.0
+    traffic = 0.0
+
+    for cname, body in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {}
+        for ins in parse_instructions(body):
+            symtab[ins["name"]] = ins["type"]
+        for ins in parse_instructions(body):
+            op, typ, rest = ins["op"], ins["type"], ins["rest"]
+            out_b = shape_bytes(typ)
+            if op in COLLECTIVE_OPS:
+                # operand bytes: look up operand names in the symtab
+                operand_names = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+                in_b = sum(shape_bytes(symtab.get(o, "")) for o in operand_names)
+                coll_bytes[op] += max(out_b, in_b) * m
+                coll_counts[op] += m
+            if op == "dot":
+                # contracting dims of lhs
+                lhs_name = re.findall(r"%([\w.\-]+)", rest)
+                lhs_t = symtab.get(lhs_name[0], "") if lhs_name else ""
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                k = 1
+                if cd and lhs_t:
+                    dims_m = _SHAPE_RE.search(lhs_t)
+                    if dims_m and dims_m.group(2):
+                        lhs_dims = [int(d) for d in dims_m.group(2).split(",")]
+                        for ci in cd.group(1).split(","):
+                            if ci:
+                                k *= lhs_dims[int(ci)]
+                # out elements = out bytes / dtype size
+                dt = _SHAPE_RE.search(typ)
+                if dt:
+                    els = 1
+                    if dt.group(2):
+                        for d in dt.group(2).split(","):
+                            els *= int(d)
+                    dot_flops += 2.0 * els * k * m
+            if op in ("fusion", "dot", "convolution", "copy", "custom-call") or op in COLLECTIVE_OPS:
+                operand_names = re.findall(r"%([\w.\-]+)", rest)
+                in_b = sum(shape_bytes(symtab.get(o, "")) for o in operand_names)
+                traffic += (out_b + in_b) * m
+
+    return {
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_counts": dict(coll_counts),
+        "dot_flops_scaled": float(dot_flops),
+        "hbm_traffic_proxy_bytes": float(traffic),
+    }
+
+
+def analyze_to_json(hlo: str) -> str:
+    return json.dumps(analyze(hlo), indent=2)

@@ -1,0 +1,123 @@
+"""CLI: ``python -m repro.analysis.lint``.
+
+Runs the registered lint checks over the aggregation-rule registry ×
+kernel-policy matrix and writes a JSON + markdown report.  Exit status:
+
+* 0 — no error findings (warnings/info allowed);
+* 1 — at least one error finding;
+* 2 — ``--known-bad`` self-test failed (the race detector did NOT flag the
+  seeded race-unsafe geometry — the linter has lost its teeth).
+
+``--host-devices N`` forces N virtual CPU devices so the sharded-AFA
+collective budget can be audited on a single-CPU CI host; it must take
+effect before jax initializes, which is why all jax-touching imports in
+this module live inside :func:`main`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static jaxpr/HLO invariant linter for the aggregation "
+                    "stack (see DESIGN.md).",
+    )
+    p.add_argument(
+        "--host-devices", type=int, default=0, metavar="N",
+        help="force N virtual CPU devices (enables the collective-budget "
+             "check on a single-CPU host)",
+    )
+    p.add_argument(
+        "--checks", nargs="*", default=None, metavar="CHECK",
+        help="subset of checks to run (default: all registered)",
+    )
+    p.add_argument(
+        "--rules", nargs="*", default=None, metavar="RULE",
+        help="subset of aggregation rules (default: the full registry)",
+    )
+    p.add_argument(
+        "--modes", nargs="*", default=None, metavar="MODE",
+        help="subset of kernel-policy modes (default: jnp interpret "
+             "pallas-gpu)",
+    )
+    p.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write the JSON report here",
+    )
+    p.add_argument(
+        "--markdown", default=None, metavar="PATH",
+        help="write the markdown report here",
+    )
+    p.add_argument(
+        "--known-bad", action="store_true",
+        help="self-test: lint the seeded race-unsafe gram geometry and "
+             "require the race detector to flag it (exit 2 if it does not)",
+    )
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.host_devices > 0:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.host_devices}"
+        ).strip()
+
+    # jax initializes on first import — keep it after the env setup above
+    from repro.analysis.registry import known_bad_findings, run_lint
+    from repro.analysis.report import Report
+
+    if args.known_bad:
+        findings = known_bad_findings()
+        detected = any(f.severity == "error" for f in findings)
+        report = Report(meta={"self_test": "known-bad geometry"})
+        report.extend(findings)
+        report.mark_ran("grid-race[known-bad]")
+        _emit(report, args)
+        if detected:
+            print("known-bad self-test: race DETECTED (as required)")
+            return 0
+        print(
+            "known-bad self-test FAILED: the seeded race-unsafe geometry "
+            "was NOT flagged", file=sys.stderr,
+        )
+        return 2
+
+    report = run_lint(
+        checks=tuple(args.checks) if args.checks else None,
+        rules=tuple(args.rules) if args.rules else None,
+        modes=tuple(args.modes) if args.modes else None,
+    )
+    _emit(report, args)
+    counts = report.counts()
+    print(
+        f"repro.analysis.lint: {'PASS' if report.ok else 'FAIL'} — "
+        f"{counts['error']} error(s), {counts['warning']} warning(s), "
+        f"{counts['info']} info across {len(report.checks_run)} check(s)"
+    )
+    for f in report.findings:
+        stream = sys.stderr if f.severity == "error" else sys.stdout
+        print(f"  [{f.severity}] {f.check} {f.target}: {f.message}",
+              file=stream)
+    return 0 if report.ok else 1
+
+
+def _emit(report, args) -> None:
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json() + "\n")
+    if args.markdown:
+        with open(args.markdown, "w") as fh:
+            fh.write(report.to_markdown())
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Retrace auditor: jit cache-miss bounds for the engine entry points.
+
+The engine's contract (PR 5) is that varying live-client counts retrace at
+most O(log K) times: ``pow2_bucket`` compacts every participation count onto
+power-of-two buckets, so sweeping K over a range must create at most one jit
+cache entry per distinct bucket.  Separately, *repeating* an identical sweep
+must create **zero** new entries — growth on the repeat means some argument
+drifts between calls (weak-type promotion, dtype flips, an unhashable static
+rebuilt per call), the classic silent-recompile bug.
+
+This is the one analysis that executes (tiny CPU probes — the jit call cache
+only populates on real calls); everything else in this package is
+trace-only.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.analysis.report import Finding, error, info
+from repro.data.sharding import pow2_bucket
+
+
+def pow2_bucket_bound(ks: Iterable[int], cap: int) -> int:
+    """Number of distinct pow2 buckets a sweep over ``ks`` may occupy — the
+    O(log K) retrace bound for compacted engine entry points."""
+    return len({pow2_bucket(int(k), cap) for k in ks})
+
+
+def _cache_size(jitted: Any) -> int | None:
+    fn = getattr(jitted, "_cache_size", None)
+    return int(fn()) if callable(fn) else None
+
+
+def audit_jit_cache(
+    jitted: Any,
+    calls: Sequence[tuple],
+    *,
+    bound: int,
+    target: str = "<anonymous>",
+    clear: bool = True,
+) -> list[Finding]:
+    """Execute ``calls`` (each a positional-arg tuple, or an
+    ``(args_tuple, kwargs_dict)`` pair for entry points with keyword static
+    arguments) against a jitted callable twice and audit its compilation
+    cache:
+
+    * after the first sweep, cache size must be ≤ ``bound``;
+    * after the identical repeat sweep, cache size must not have grown
+      (growth = weak-type/dtype drift causing silent recompiles).
+
+    Returns ``info`` when the callable exposes no ``_cache_size`` (older
+    jax) — the audit is then inconclusive, not failed.
+    """
+    if _cache_size(jitted) is None:
+        return [info(
+            "retrace", target,
+            "jit cache introspection unavailable (_cache_size missing); "
+            "retrace audit skipped",
+        )]
+    def _invoke(call: tuple) -> None:
+        if len(call) == 2 and isinstance(call[0], tuple) and isinstance(call[1], dict):
+            jitted(*call[0], **call[1])
+        else:
+            jitted(*call)
+
+    if clear:
+        jitted.clear_cache()
+    for args in calls:
+        _invoke(args)
+    first = _cache_size(jitted)
+    findings: list[Finding] = []
+    if first is not None and first > bound:
+        findings.append(error(
+            "retrace", target,
+            f"sweep of {len(calls)} call(s) created {first} jit cache "
+            f"entries, exceeding the O(log K) bound of {bound}",
+        ))
+    for args in calls:
+        _invoke(args)
+    second = _cache_size(jitted)
+    if first is not None and second is not None and second > first:
+        findings.append(error(
+            "retrace", target,
+            f"repeating an identical sweep grew the jit cache from {first} "
+            f"to {second} entries — weak-type/dtype drift is causing "
+            "silent recompiles",
+        ))
+    return findings
+
+
+def audit_host_cache(
+    cached_fn: Any,
+    build: Callable[[], None],
+    *,
+    bound: int,
+    target: str = "<anonymous>",
+) -> list[Finding]:
+    """Audit an ``lru_cache``-backed host-side builder (e.g. the engine's
+    fused-segment cache): run ``build()`` and require that the *new* cache
+    misses it incurred stay within ``bound``."""
+    before = cached_fn.cache_info().misses
+    build()
+    misses = cached_fn.cache_info().misses - before
+    if misses > bound:
+        return [error(
+            "retrace", target,
+            f"host builder cache took {misses} misses for the sweep, "
+            f"exceeding the O(log K) bound of {bound}",
+        )]
+    return []

@@ -65,6 +65,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
+
 EPS = 1e-12  # must match core/afa.py
 
 
@@ -157,7 +159,7 @@ def _screen(gram, unorm2, pn, mask0, *, xi0, delta_xi, max_rounds, ddof):
     return weights(mask), mask, rounds, s
 
 
-def _kernel_onepass(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
+def _afa_screen_onepass_kernel(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
                     sims_ref, *, xi0, delta_xi, max_rounds, ddof):
     """Single grid step: gram + screening + aggregate on one resident tile."""
     u = u_ref[...].astype(jnp.float32)
@@ -175,7 +177,7 @@ def _kernel_onepass(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
     sims_ref[...] = s[None, :]
 
 
-def _kernel_twopass(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
+def _afa_screen_twopass_kernel(u_ref, pn_ref, mask_ref, agg_ref, good_ref, rounds_ref,
                     sims_ref, g_ref, un_ref, w_ref, *, nb, xi0, delta_xi,
                     max_rounds, ddof):
     """Grid (2, nb): pass 0 accumulates gram/norms (+screens at its last
@@ -244,7 +246,7 @@ def afa_screen_call(
     )
     if block_d is None or block_d >= d:
         agg, good, rounds, sims = pl.pallas_call(
-            functools.partial(_kernel_onepass, **screen_kw),
+            functools.partial(_afa_screen_onepass_kernel, **screen_kw),
             grid=(1,),
             in_specs=[
                 pl.BlockSpec((K, d), lambda i: (0, 0)),
@@ -267,7 +269,7 @@ def afa_screen_call(
         jax.ShapeDtypeStruct((1, K), jnp.float32),   # final weights
     )
     agg, good, rounds, sims, _, _, _ = pl.pallas_call(
-        functools.partial(_kernel_twopass, nb=nb, **screen_kw),
+        functools.partial(_afa_screen_twopass_kernel, nb=nb, **screen_kw),
         grid=(2, nb),
         in_specs=[
             pl.BlockSpec((K, block_d), lambda p, b: (0, b)),
@@ -290,3 +292,18 @@ def afa_screen_call(
         interpret=interpret,
     )(updates, pn[None, :], mask0[None, :])
     return agg[0], good[0], rounds[0, 0], sims[0]
+
+
+# Declared grid-geometry contracts (kernels/meta.py).  The one-pass geometry
+# runs the whole algorithm in a single grid step; the two-pass d-tiled grid
+# keeps the gram/weight accumulators resident across steps (pass 0) and is
+# therefore sequential-grid only — ops.py forces the one-pass geometry for
+# compiled off-TPU launches.
+register_kernel_geometry(
+    "_afa_screen_onepass_kernel", "single-step", True,
+    "grid (1,): gram + screening loop + weighted sum in one step",
+)
+register_kernel_geometry(
+    "_afa_screen_twopass_kernel", "cross-step", False,
+    "resident gram/norm/weight accumulators across the (2, nb) grid",
+)

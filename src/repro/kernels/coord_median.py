@@ -31,8 +31,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
 
-def _kernel(u_ref, med_ref, *, K: int):
+
+def _coord_median_kernel(u_ref, med_ref, *, K: int):
     x = u_ref[...].astype(jnp.float32)  # (K, BD)
     lt = (x[None, :, :] < x[:, None, :]).astype(jnp.int32)  # cmp[i,k,:] = x_k < x_i
     idx = jax.lax.broadcasted_iota(jnp.int32, (K, K, 1), 0) > jax.lax.broadcasted_iota(
@@ -46,7 +48,7 @@ def _kernel(u_ref, med_ref, *, K: int):
     med_ref[...] = (0.5 * (v_lo + v_hi))[None, :]
 
 
-def _kernel_masked(u_ref, mask_ref, med_ref, *, K: int):
+def _coord_median_masked_kernel(u_ref, mask_ref, med_ref, *, K: int):
     x = u_ref[...].astype(jnp.float32)       # (K, BD)
     live = mask_ref[...] != 0                # (K, 1)
     m = jnp.sum(live.astype(jnp.int32))
@@ -74,7 +76,7 @@ def coord_median(
     assert d % block_d == 0, (d, block_d)
     if mask is None:
         out = pl.pallas_call(
-            functools.partial(_kernel, K=K),
+            functools.partial(_coord_median_kernel, K=K),
             grid=(d // block_d,),
             in_specs=[pl.BlockSpec((K, block_d), lambda b: (0, b))],
             out_specs=pl.BlockSpec((1, block_d), lambda b: (0, b)),
@@ -83,7 +85,7 @@ def coord_median(
         )(updates)
         return out[0]
     out = pl.pallas_call(
-        functools.partial(_kernel_masked, K=K),
+        functools.partial(_coord_median_masked_kernel, K=K),
         grid=(d // block_d,),
         in_specs=[
             pl.BlockSpec((K, block_d), lambda b: (0, b)),
@@ -94,3 +96,15 @@ def coord_median(
         interpret=interpret,
     )(updates, mask)
     return out[0]
+
+
+# Declared grid-geometry contract (kernels/meta.py): one distinct output
+# d-block per grid step — parallel-grid safe (both mask variants).
+register_kernel_geometry(
+    "_coord_median_kernel", "per-step", True,
+    "one distinct median d-block per grid step",
+)
+register_kernel_geometry(
+    "_coord_median_masked_kernel", "per-step", True,
+    "one distinct median d-block per grid step, mask-aware ranking",
+)

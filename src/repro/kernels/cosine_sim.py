@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
 
-def _kernel(u_ref, w_ref, dots_ref, unorm2_ref, wnorm2_ref):
+
+def _cosine_sim_kernel(u_ref, w_ref, dots_ref, unorm2_ref, wnorm2_ref):
     b = pl.program_id(0)
 
     @pl.when(b == 0)
@@ -60,7 +62,7 @@ def cosine_sim_parts(
         jax.ShapeDtypeStruct((1, 1), jnp.float32),
     )
     return pl.pallas_call(
-        _kernel,
+        _cosine_sim_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((K, block_d), lambda b: (0, b)),
@@ -74,3 +76,12 @@ def cosine_sim_parts(
         out_shape=out_shapes,
         interpret=interpret,
     )(updates, agg)
+
+
+# Declared grid-geometry contract (kernels/meta.py): the three partial
+# reductions accumulate into constant-index blocks across the d grid —
+# sequential grids only (repro.analysis.races re-derives and enforces this).
+register_kernel_geometry(
+    "_cosine_sim_kernel", "cross-step", False,
+    "dots/unorm2/wnorm2 blocks accumulated over the d grid axis",
+)

@@ -23,12 +23,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.meta import register_kernel_geometry
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+def _flash_attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
             *, block_q, block_k, causal, lk):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
@@ -99,7 +101,7 @@ def flash_attention_bh(
 
     out = pl.pallas_call(
         functools.partial(
-            _kernel, block_q=block_q, block_k=block_k, causal=causal, lk=lk
+            _flash_attn_kernel, block_q=block_q, block_k=block_k, causal=causal, lk=lk
         ),
         grid=(bh, nq, nk),
         in_specs=[
@@ -117,3 +119,12 @@ def flash_attention_bh(
         interpret=interpret,
     )(q, k, v)
     return out[:, :lq]
+
+
+# Declared grid-geometry contract (kernels/meta.py): the kv recurrence is
+# carried in VMEM scratch across the minor-most nk grid axis — sequential
+# grids only; a compiled off-TPU launch fails at lowering rather than race.
+register_kernel_geometry(
+    "_flash_attn_kernel", "scratch", False,
+    "m/l/acc scratch recurrence over the minor-most kv grid axis",
+)

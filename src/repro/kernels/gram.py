@@ -23,8 +23,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
 
-def _kernel(u_ref, g_ref):
+
+def _gram_kernel(u_ref, g_ref):
     b = pl.program_id(0)
 
     @pl.when(b == 0)
@@ -37,7 +39,7 @@ def _kernel(u_ref, g_ref):
     )
 
 
-def _kernel_tiled(ui_ref, uj_ref, g_ref):
+def _gram_kernel_tiled(ui_ref, uj_ref, g_ref):
     b = pl.program_id(2)  # d-axis is minor-most: sequential per output tile
 
     @pl.when(b == 0)
@@ -62,7 +64,7 @@ def gram(
     assert d % block_d == 0, (d, block_d)
     if block_k is None or block_k >= K:
         return pl.pallas_call(
-            _kernel,
+            _gram_kernel,
             grid=(d // block_d,),
             in_specs=[pl.BlockSpec((K, block_d), lambda b: (0, b))],
             out_specs=pl.BlockSpec((K, K), lambda b: (0, 0)),
@@ -71,7 +73,7 @@ def gram(
         )(updates)
     assert K % block_k == 0, (K, block_k)
     return pl.pallas_call(
-        _kernel_tiled,
+        _gram_kernel_tiled,
         grid=(K // block_k, K // block_k, d // block_d),
         in_specs=[
             pl.BlockSpec((block_k, block_d), lambda i, j, b: (i, b)),
@@ -81,3 +83,16 @@ def gram(
         out_shape=jax.ShapeDtypeStruct((K, K), jnp.float32),
         interpret=interpret,
     )(updates, updates)
+
+
+# Declared grid-geometry contract (kernels/meta.py), cross-checked statically
+# by repro.analysis.races: both gram layouts accumulate their (K, K) / (BK,
+# BK) output block across d-grid steps — sequential grids only.
+register_kernel_geometry(
+    "_gram_kernel", "cross-step", False,
+    "constant-index (K, K) block accumulated over the d grid axis",
+)
+register_kernel_geometry(
+    "_gram_kernel_tiled", "cross-step", False,
+    "(BK, BK) output tile accumulated over the minor-most d grid axis",
+)

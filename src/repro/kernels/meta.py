@@ -1,0 +1,80 @@
+"""Declared grid-geometry contracts for every Pallas kernel in this package.
+
+Each kernel body registers a :class:`KernelGeometry` describing how its grid
+steps interact with its output blocks.  The declaration is the *contract*;
+``repro.analysis.races`` statically re-derives the actual behavior from the
+``pallas_call`` equation's ``index_map``s and cross-checks it against the
+declaration — a kernel that claims ``parallel_grid_safe=True`` while its
+jaxpr revisits an output block with read-modify-write semantics is a lint
+ERROR on every route, and any revisited RMW block is an ERROR when the
+target backend runs the grid in parallel (the Triton ``pallas-gpu`` route).
+
+``accumulation`` vocabulary:
+
+* ``"cross-step"`` — an output block is revisited across grid steps and
+  accumulated into (``+=`` on a constant-index block).  Safe ONLY on
+  sequential grids (TPU Mosaic, the Pallas interpreter); a parallel grid
+  races.  ``ops.py`` therefore forces these kernels onto single-grid-step
+  geometries off-TPU (``GPU_ONEPASS_BUDGET``).
+* ``"per-step"`` — every grid step writes a distinct output block; no block
+  is ever revisited, so the kernel is parallel-grid safe as-is.
+* ``"single-step"`` — the grid has exactly one step by construction; nothing
+  to revisit.
+* ``"scratch"`` — a sequential recurrence carried in VMEM scratch (the
+  flash-attention kv loop).  The *output* index maps look clean, but the
+  scratch recurrence still requires a sequential minor grid axis, so the
+  kernel is declared parallel-grid unsafe and a compiled off-TPU launch must
+  fail at lowering rather than race.
+
+The registry key is the kernel body function's ``__name__`` — which is what
+``pallas_call`` records as the launch name in the jaxpr — so every kernel
+body in this package carries a unique, grep-able name (``_gram_kernel``, not
+``_kernel``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+ACCUMULATION_KINDS = ("cross-step", "per-step", "single-step", "scratch")
+
+
+class KernelGeometry(NamedTuple):
+    """Declared contract of one Pallas kernel body."""
+
+    name: str                 # kernel body __name__ == pallas_call launch name
+    accumulation: str         # one of ACCUMULATION_KINDS
+    parallel_grid_safe: bool  # may the grid legally execute in parallel?
+    notes: str = ""
+
+
+KERNEL_GEOMETRY: dict[str, KernelGeometry] = {}
+
+
+def register_kernel_geometry(
+    name: str,
+    accumulation: str,
+    parallel_grid_safe: bool,
+    notes: str = "",
+) -> KernelGeometry:
+    """Register a kernel body's declared geometry (idempotent per name)."""
+    if accumulation not in ACCUMULATION_KINDS:
+        raise ValueError(
+            f"accumulation {accumulation!r} invalid; expected one of "
+            f"{ACCUMULATION_KINDS}"
+        )
+    if accumulation == "cross-step" and parallel_grid_safe:
+        raise ValueError(
+            f"kernel {name!r}: cross-step accumulation can never be "
+            "parallel-grid safe"
+        )
+    geom = KernelGeometry(name, accumulation, parallel_grid_safe, notes)
+    KERNEL_GEOMETRY[name] = geom
+    return geom
+
+
+def kernel_geometry(name: str) -> KernelGeometry | None:
+    """The declared geometry for a pallas_call launch name, or None for
+    kernels outside this package (the race detector then falls back to the
+    purely derived classification)."""
+    return KERNEL_GEOMETRY.get(name)

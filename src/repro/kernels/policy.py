@@ -108,7 +108,15 @@ def explicit_kernel_request(use_kernels: bool | str | None) -> str | None:
     jnp reference under auto selection but raise when a kernel route is
     explicitly demanded.
     """
-    if isinstance(use_kernels, str) and use_kernels.strip().lower() != "auto":
+    if isinstance(use_kernels, str):
+        # the explicit "auto" string asks for backend auto-selection and is
+        # never an explicit kernel demand — mirroring resolve_kernel_mode,
+        # which ignores the env pin for it (a truthy-string fallthrough
+        # here used to leak the env-pinned mode, making geomed raise under
+        # use_kernels="auto" + $REPRO_KERNELS=interpret even though
+        # resolution would pick jnp)
+        if use_kernels.strip().lower() == "auto":
+            return None
         return resolve_kernel_mode(use_kernels)
     if use_kernels and requested_policy() != "auto":
         return requested_policy()

@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
 
-def _kernel(u_ref, mask_ref, out_ref, *, K: int, trim: int):
+
+def _trimmed_mean_kernel(u_ref, mask_ref, out_ref, *, K: int, trim: int):
     x = u_ref[...].astype(jnp.float32)       # (K, BD)
     live = mask_ref[...] != 0                # (K, 1)
     m = jnp.sum(live.astype(jnp.int32))
@@ -58,7 +60,7 @@ def trimmed_mean(
     K, d = updates.shape
     assert d % block_d == 0, (d, block_d)
     out = pl.pallas_call(
-        functools.partial(_kernel, K=K, trim=trim),
+        functools.partial(_trimmed_mean_kernel, K=K, trim=trim),
         grid=(d // block_d,),
         in_specs=[
             pl.BlockSpec((K, block_d), lambda b: (0, b)),
@@ -69,3 +71,11 @@ def trimmed_mean(
         interpret=interpret,
     )(updates, mask)
     return out[0]
+
+
+# Declared grid-geometry contract (kernels/meta.py): one distinct output
+# d-block per grid step — parallel-grid safe.
+register_kernel_geometry(
+    "_trimmed_mean_kernel", "per-step", True,
+    "one distinct trimmed-mean d-block per grid step",
+)

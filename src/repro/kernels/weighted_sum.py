@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import register_kernel_geometry
 
-def _kernel(c_ref, u_ref, out_ref):
+
+def _weighted_sum_kernel(c_ref, u_ref, out_ref):
     c = c_ref[...].astype(jnp.float32)  # (1, K)
     u = u_ref[...].astype(jnp.float32)  # (K, BD)
     out_ref[...] = jax.lax.dot_general(
@@ -35,7 +37,7 @@ def weighted_sum(
     K, d = updates.shape
     assert d % block_d == 0, (d, block_d)
     out = pl.pallas_call(
-        _kernel,
+        _weighted_sum_kernel,
         grid=(d // block_d,),
         in_specs=[
             pl.BlockSpec((1, K), lambda b: (0, 0)),
@@ -46,3 +48,11 @@ def weighted_sum(
         interpret=interpret,
     )(weights, updates)
     return out[0]
+
+
+# Declared grid-geometry contract (kernels/meta.py): every grid step writes
+# its own distinct (1, BLOCK_D) output block — parallel-grid safe.
+register_kernel_geometry(
+    "_weighted_sum_kernel", "per-step", True,
+    "one distinct output d-block per grid step, no revisits",
+)

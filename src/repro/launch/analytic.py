@@ -12,9 +12,7 @@ Conventions:
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.launch.specs import INPUT_SHAPES, LOCAL_STEPS, fed_client_count
+from repro.launch.specs import INPUT_SHAPES, LOCAL_STEPS
 
 
 def _param_counts(cfg) -> dict:

@@ -8,13 +8,12 @@ Everything here is allocation-free: parameter/cache shapes come from
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes, num_client_rows
+from repro.launch.mesh import num_client_rows
 from repro.launch.sharding import batch_pspec, cache_pspec, shard_params_tree
 
 INPUT_SHAPES = {

@@ -4,7 +4,6 @@ positional args match ``repro.launch.specs.input_specs`` order."""
 
 from __future__ import annotations
 
-import functools
 
 from repro.core.afa import AFAConfig
 from repro.fed.distributed import FedRoundConfig, make_fed_round

@@ -17,7 +17,6 @@ All support GQA: q heads grouped over kv heads.  Shapes:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

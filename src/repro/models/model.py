@@ -16,7 +16,6 @@ Batch conventions (built by ``repro.data`` / ``input_specs``):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -8,7 +8,6 @@ pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install 
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    AFAConfig,
     afa_aggregate,
     comed_aggregate,
     fa_aggregate,

@@ -137,37 +137,13 @@ def test_fused_kernel_ddof_and_thresholds():
 # --------------------------- launch structure --------------------------------
 
 
-def _count_pallas_launches(fn, *args) -> int:
-    try:
-        from jax.extend.core import ClosedJaxpr, Jaxpr
-    except ImportError:  # older jax
-        from jax.core import ClosedJaxpr, Jaxpr
-
-    def subjaxprs(val):
-        if isinstance(val, ClosedJaxpr):
-            return [val.jaxpr]
-        if isinstance(val, Jaxpr):
-            return [val]
-        if isinstance(val, (list, tuple)):
-            return [j for v in val for j in subjaxprs(v)]
-        return []
-
-    def count(jx) -> int:
-        n = 0
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for val in eqn.params.values():
-                n += sum(count(sub) for sub in subjaxprs(val))
-        return n
-
-    return count(jax.make_jaxpr(fn)(*args).jaxpr)
-
-
 def test_one_pallas_launch_per_aggregation():
-    """The tentpole claim, verified on the jaxpr: the fused route binds
-    EXACTLY one pallas_call; the chained route at least two (gram +
-    weighted-sum); the jnp route none."""
+    """The tentpole claim, verified on the jaxpr via the repro.analysis
+    launch-count API: the fused route binds EXACTLY one pallas_call; the
+    chained route at least two (gram + weighted-sum); the jnp route none."""
+    from repro.analysis import LaunchBudget
+    from repro.analysis.launches import assert_launch_budget
+
     u, n_k, p_k = _workload(RNG, 10, 64)
 
     def route(kernel_launch):
@@ -175,12 +151,14 @@ def test_one_pallas_launch_per_aggregation():
                         kernel_launch=kernel_launch)
         return lambda u_, n_, p_: afa_aggregate(u_, n_, p_, config=cfg)
 
-    assert _count_pallas_launches(route("fused"), u, n_k, p_k) == 1
-    assert _count_pallas_launches(route("chained"), u, n_k, p_k) >= 2
+    assert_launch_budget(route("fused"), u, n_k, p_k,
+                         budget=LaunchBudget(exact=1), target="afa[fused]")
+    assert_launch_budget(route("chained"), u, n_k, p_k,
+                         budget=LaunchBudget(min=2), target="afa[chained]")
     cfg_jnp = AFAConfig(variant="gram", use_kernels=False)
-    assert _count_pallas_launches(
+    assert_launch_budget(
         lambda u_, n_, p_: afa_aggregate(u_, n_, p_, config=cfg_jnp),
-        u, n_k, p_k) == 0
+        u, n_k, p_k, budget=LaunchBudget(exact=0), target="afa[jnp]")
 
 
 # ------------------------- two-pass tiled geometry ---------------------------

@@ -1,7 +1,6 @@
 """CLI integration tests: the train and serve launchers run end-to-end on
 reduced configs in-process (single device)."""
 
-import numpy as np
 
 from repro.launch.serve import main as serve_main
 from repro.launch.train import main as train_main

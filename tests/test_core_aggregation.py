@@ -1,6 +1,5 @@
 """Unit tests for the core aggregation rules against numpy oracles."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

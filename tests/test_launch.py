@@ -7,7 +7,6 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import (

@@ -1,0 +1,129 @@
+"""Kernel-policy edge cases (kernels/policy.py): the explicit ``"auto"``
+string, the ``$REPRO_KERNELS`` × ``use_kernels`` interplay in
+``explicit_kernel_request``, and invalid-mode errors."""
+
+import jax
+import pytest
+
+from repro.kernels.policy import (
+    ENV_VAR,
+    MODES,
+    explicit_kernel_request,
+    requested_policy,
+    resolve_kernel_mode,
+)
+
+
+# ------------------------------ resolve ---------------------------------------
+
+
+def test_false_and_none_resolve_jnp_even_with_env_pinned(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert resolve_kernel_mode(False) == "jnp"
+    assert resolve_kernel_mode(None) == "jnp"
+
+
+def test_explicit_auto_string_resolves_by_backend(monkeypatch):
+    # "auto" as an explicit string re-resolves exactly like use_kernels=True
+    # under an unset env: pallas on TPU, jnp everywhere else — never
+    # pallas-gpu, never interpret.
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    expected = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert resolve_kernel_mode("auto") == expected
+    assert resolve_kernel_mode(True) == expected
+
+
+def test_explicit_auto_ignores_env_pin(monkeypatch):
+    # the per-call string wins over $REPRO_KERNELS: "auto" asks for backend
+    # auto-selection even when the process policy pins a mode
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    expected = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert resolve_kernel_mode("auto") == expected
+    # ...while use_kernels=True defers to the env pin
+    assert resolve_kernel_mode(True) == "interpret"
+
+
+def test_mode_strings_resolve_to_themselves_case_insensitively():
+    for mode in MODES:
+        assert resolve_kernel_mode(mode) == mode
+        assert resolve_kernel_mode(mode.upper()) == mode
+        assert resolve_kernel_mode(f"  {mode} ") == mode
+
+
+def test_invalid_mode_string_raises():
+    with pytest.raises(ValueError, match="invalid"):
+        resolve_kernel_mode("cuda")
+    with pytest.raises(ValueError, match="invalid"):
+        resolve_kernel_mode("pallas_gpu")  # underscore, not the dash
+
+
+def test_invalid_env_policy_raises(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "metal")
+    with pytest.raises(ValueError, match=ENV_VAR):
+        requested_policy()
+    # and it propagates through a True request, which consults the env
+    with pytest.raises(ValueError, match=ENV_VAR):
+        resolve_kernel_mode(True)
+
+
+# -------------------------- explicit_kernel_request ---------------------------
+
+
+def test_explicit_request_mode_string_is_explicit(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert explicit_kernel_request("interpret") == "interpret"
+    assert explicit_kernel_request("pallas-gpu") == "pallas-gpu"
+
+
+def test_explicit_request_auto_string_is_not_explicit(monkeypatch):
+    # "auto" is a request for auto-selection — rules without a kernel for
+    # their hot op must NOT raise under it
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert explicit_kernel_request("auto") is None
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert explicit_kernel_request("auto") is None
+
+
+def test_explicit_request_true_with_env_pin_is_explicit(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert explicit_kernel_request(True) == "interpret"
+    monkeypatch.setenv(ENV_VAR, "jnp")
+    assert explicit_kernel_request(True) == "jnp"
+
+
+def test_explicit_request_true_with_auto_env_is_not_explicit(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert explicit_kernel_request(True) is None
+    monkeypatch.setenv(ENV_VAR, "auto")
+    assert explicit_kernel_request(True) is None
+
+
+def test_explicit_request_false_is_never_explicit(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert explicit_kernel_request(False) is None
+    assert explicit_kernel_request(None) is None
+
+
+def test_kernel_less_rules_trace_zero_launches_on_every_route(monkeypatch):
+    """geomed/centered_clip have no kernel for their hot op (the Weiszfeld /
+    clipping iterations): they run the jnp reference under EVERY kernel
+    policy mode — zero pallas launches, verified via the analysis API."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.core.extra_rules  # noqa: F401  (registers the rules)
+    from repro.analysis import LaunchBudget
+    from repro.analysis.launches import assert_launch_budget
+    from repro.core.baselines import RuleOptions, dispatch_rule
+
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    u = jnp.asarray(np.ones((4, 8), np.float32))
+    n_k = jnp.ones((4,), jnp.float32)
+    for rule in ("geomed", "centered_clip"):
+        for mode in (False, True, "interpret", "pallas-gpu"):
+            opts = RuleOptions(use_kernels=mode)
+            assert_launch_budget(
+                lambda u_, n_, r=rule, o=opts: dispatch_rule(r, u_, n_, opts=o),
+                u, n_k, budget=LaunchBudget(exact=0),
+                target=f"{rule}/{mode}",
+            )
