@@ -90,6 +90,8 @@ def collect_speedups(doc: dict) -> dict[str, float]:
     for r in doc.get("kernel", []):
         out[f"kernel_fused_vs_chained/K{r['K']}"] = float(r["fused_vs_chained"])
         out[f"kernel_fused_vs_jnp/K{r['K']}"] = float(r["fused_vs_jnp"])
+    for r in doc.get("fed_llm", []):
+        out[f"fed_llm_agg/K{r['K']}"] = float(r["agg_speedup"])
     for r in doc.get("client_scaling", []):
         out[f"client_scaling/K{r['K']}"] = float(r["post_block_speedup"])
     return out

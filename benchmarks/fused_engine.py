@@ -435,6 +435,132 @@ def run_client_scaling(tiny: bool = False) -> tuple[list[dict], list[dict]]:
     return doc["rows"], doc["record"]
 
 
+# fed_llm scenario geometry: the transformer LoRA workload through the fused
+# engine (fed.workload) — 6 clients, 2 byzantine.  Two numbers: rounds/sec of
+# the whole scanned LLM simulation (one fused jit, adapter-delta proposals),
+# and the aggregation-buffer win of low-rank proposals: one AFA dispatch on
+# the packed (K, D_adapter) buffer vs the same dispatch on the (K, D_full)
+# buffer a full-parameter workload would ship.  The scenario also asserts the
+# robustness outcome (both attackers blocked within the horizon) so the
+# timing can never go green on a broken simulation.
+LLM_CLIENTS = 6
+LLM_BYZANTINE = 2
+
+
+def _llm_workload(tiny: bool):
+    from repro.fed.workload import get_workload
+
+    if tiny:
+        from repro.models import ModelConfig
+
+        cfg = ModelConfig(
+            name="bench-lora", family="dense", num_layers=2, d_model=32,
+            vocab_size=64, num_heads=4, num_kv_heads=2, d_ff=64,
+            block_q=16, block_k=16,
+        )
+        return get_workload("lora", model_cfg=cfg, rank=2)
+    return get_workload("lora", arch="smollm-135m", reduced=True, rank=4)
+
+
+def run_fed_llm(tiny: bool = False) -> tuple[list[dict], list[dict]]:
+    """Federated LLM fine-tuning on low-rank deltas: fused-scan rounds/sec
+    plus the adapter-vs-full-parameter aggregation speedup (see the section
+    comment above)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.core import RuleOptions, dispatch_rule
+    from repro.fed.workload import make_llm_fused_data, run_llm_simulation
+    from repro.utils.trees import pack_spec, pack_stack, tree_broadcast_clients
+
+    K, byz = LLM_CLIENTS, LLM_BYZANTINE
+    rounds = 6 if tiny else 8
+    seq, samples = (16, 8) if tiny else (32, 16)
+    workload = _llm_workload(tiny)
+    data = make_llm_fused_data(
+        workload.model_cfg, clients=K, samples_per_client=samples, seq=seq,
+        n_test=8,
+    )
+    kw = dict(
+        clients=K, byzantine=byz, rounds=rounds, local_steps=2, batch=2,
+        seq=seq, scenario="byzantine", data=data,
+    )
+
+    # correctness first (also the compile warmup): AFA must block both
+    # attackers on the adapter buffer
+    res = run_llm_simulation(workload, **kw)
+    blocked = res["blocked"][-1]
+    assert blocked[:byz].all(), f"byzantine clients not blocked: {blocked}"
+    assert not blocked[byz:].any(), f"benign client blocked: {blocked}"
+
+    t_sim = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run_llm_simulation(workload, **kw)
+        t_sim = min(t_sim, time.perf_counter() - t0)
+    rounds_per_s = rounds / max(t_sim, 1e-9)
+
+    # aggregation-buffer win: identical AFA dispatch, adapter rows vs the
+    # full-parameter rows a whole-model workload would propose
+    params = workload.init_params(jax.random.PRNGKey(0))
+    adapters = workload.codec.proposal_of(params)
+    rng = np.random.default_rng(0)
+
+    def proposal_buffer(tree):
+        u = pack_stack(tree_broadcast_clients(tree, K), pack_spec(tree))
+        u = u + jnp.asarray(rng.normal(size=u.shape).astype(np.float32))
+        return u.at[:byz].multiply(25.0)  # outliers: screening iterates
+
+    u_full = proposal_buffer(params)
+    u_adapter = proposal_buffer(adapters)
+    n_k = jnp.full((K,), float(samples), jnp.float32)
+    p_k = jnp.full((K,), 0.5, jnp.float32)
+    mask = jnp.ones((K,), bool)
+    opts = RuleOptions()
+    t_full = t_adapter = float("inf")
+    for _ in range(REPEATS):
+        t_full = min(t_full, timeit(
+            lambda: dispatch_rule("afa", u_full, n_k, p_k, mask, opts),
+            warmup=1, iters=5))
+        t_adapter = min(t_adapter, timeit(
+            lambda: dispatch_rule("afa", u_adapter, n_k, p_k, mask, opts),
+            warmup=1, iters=5))
+    agg_speedup = t_full / max(t_adapter, 1e-9)
+    d_adapter, d_full = u_adapter.shape[1], u_full.shape[1]
+
+    rows = [
+        {"name": f"fused_engine/fed_llm/K{K}/rounds_per_s",
+         "us_per_call": round(t_sim / rounds * 1e6, 1),
+         "derived": f"{rounds_per_s:.2f}rounds_per_s"},
+        {"name": f"fused_engine/fed_llm/K{K}/agg_full",
+         "us_per_call": round(t_full * 1e6, 1), "derived": f"D{d_full}"},
+        {"name": f"fused_engine/fed_llm/K{K}/agg_adapter",
+         "us_per_call": round(t_adapter * 1e6, 1), "derived": f"D{d_adapter}"},
+        {"name": f"fused_engine/fed_llm/K{K}/agg_speedup",
+         "us_per_call": "",
+         "derived": f"adapter={agg_speedup:.2f}x_vs_full"},
+    ]
+    record = [{
+        "K": K,
+        "byzantine": byz,
+        "rank": int(workload.rank),
+        "rounds": rounds,
+        "adapter_dim": int(d_adapter),
+        "param_dim": int(d_full),
+        "adapter_fraction": round(d_adapter / d_full, 4),
+        "sim_s": round(t_sim, 6),
+        "rounds_per_s": round(rounds_per_s, 2),
+        "full_agg_s": round(t_full, 6),
+        "adapter_agg_s": round(t_adapter, 6),
+        "agg_speedup": round(agg_speedup, 2),
+        "attackers_blocked": True,
+    }]
+    return rows, record
+
+
 # kernel-scenario geometry: the aggregation hot path alone, AFA gram variant
 # on a synthetic (K, D) stack with planted outliers so the screening loop
 # actually iterates.  Three routes: jnp oracle, chained kernels (PR-4:
@@ -596,6 +722,8 @@ def run(quick: bool = False, tiny: bool = False,
     rows.extend(packed_rows)
     kernel_rows, kernel_record = run_kernel(tiny=tiny)
     rows.extend(kernel_rows)
+    llm_rows, llm_record = run_fed_llm(tiny=tiny)
+    rows.extend(llm_rows)
     cs_rows, cs_record = run_client_scaling(tiny=tiny)
     rows.extend(cs_rows)
     with open(OUT_JSON, "w") as f:
@@ -609,6 +737,7 @@ def run(quick: bool = False, tiny: bool = False,
             "compaction": compact_record,
             "packed": packed_record,
             "kernel": kernel_record,
+            "fed_llm": llm_record,
             "client_scaling": cs_record,
         }, f, indent=2)
     return rows

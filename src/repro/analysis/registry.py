@@ -101,6 +101,37 @@ def _workload(K: int = 8, d: int = 256, seed: int = 0):
     return u, n_k, p_k, mask
 
 
+def _adapter_workload(K: int = 8, seed: int = 0):
+    """Packed LoRA adapter proposals — the workload-layer twin of
+    :func:`_workload`.  Rows are one client's adapter tree packed with its
+    ``PackSpec`` (exactly the buffer the fused engine hands ``dispatch_rule``
+    for delta workloads), so every rule × mode budget is checked on the
+    adapter wire format too."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fed.workload import init_lora_adapters
+    from repro.utils.trees import pack_spec, pack_stack, tree_broadcast_clients
+
+    layers = {
+        "attn": {
+            "wq": jnp.zeros((2, 16, 16), jnp.float32),
+            "wo": jnp.zeros((2, 16, 16), jnp.float32),
+        }
+    }
+    adapters = init_lora_adapters(
+        jax.random.PRNGKey(seed), layers, ("wq", "wo"), rank=2
+    )
+    rng = np.random.default_rng(seed)
+    u = pack_stack(tree_broadcast_clients(adapters, K), pack_spec(adapters))
+    u = u + jnp.asarray(rng.normal(size=u.shape).astype(np.float32))
+    u = u.at[: max(K // 4, 1)].multiply(25.0)  # outliers: screening iterates
+    n_k = jnp.asarray(rng.integers(1, 50, size=K).astype(np.float32))
+    p_k = jnp.asarray(rng.uniform(0.2, 0.8, size=K).astype(np.float32))
+    mask = jnp.ones((K,), bool)
+    return u, n_k, p_k, mask
+
+
 def _registered_rules() -> dict:
     import repro.core.extra_rules  # noqa: F401  (registers geomed & co)
     from repro.core.baselines import RULES
@@ -110,12 +141,16 @@ def _registered_rules() -> dict:
 
 def iter_targets(scope: LintScope) -> Iterator[_Target]:
     """One traceable entry point per (rule, mode) cell — AFA contributes a
-    cell per launch strategy."""
+    cell per launch strategy, and every cell is traced twice: on the dense
+    full-parameter buffer and on the packed adapter buffer
+    (``adapter:{rule}/{mode}``) with the SAME budget, since the dispatch path
+    must be workload-agnostic."""
     from repro.core.afa import AFAConfig
     from repro.core.baselines import RuleOptions, dispatch_rule
 
     rules = _registered_rules()
     args = _workload()
+    adapter_args = _adapter_workload()
     for mode in scope.modes:
         use_kernels: bool | str = False if mode == "jnp" else mode
         for name in scope.rules:
@@ -142,6 +177,10 @@ def iter_targets(scope: LintScope) -> Iterator[_Target]:
                     return dispatch_rule(_name, u, n_k, p_k, mask, _opts)
 
                 yield _Target(f"{label}/{mode}", entry, args, mode, budget)
+                yield _Target(
+                    f"adapter:{label}/{mode}", entry, adapter_args, mode,
+                    budget,
+                )
 
 
 @register_check(
@@ -195,6 +234,12 @@ def _check_host_transfers(report: Report, scope: LintScope) -> None:
     report.extend(check_no_host_transfers(
         scan_fn, *trace_args, target="engine.fused_scan"
     ))
+    # ...and the same scan with the transformer LoRA workload in the round
+    # body: the scanned frozen-base forward/backward must stay transfer-free
+    lora_fn, lora_args = _tiny_lora_sim()
+    report.extend(check_no_host_transfers(
+        lora_fn, *lora_args, target="engine.lora_fused_scan"
+    ))
 
 
 def _tiny_fused_sim():
@@ -220,6 +265,43 @@ def _tiny_fused_sim():
     return scan_fn, round_fn, (
         setup.params0, jnp.uint32(sim.seed), _fused_data(setup)
     )
+
+
+def _tiny_lora_sim():
+    """A minimal LoRA fused simulation, built (never run) for engine lint.
+
+    Returns ``(scan_fn, (params0, seed, data))``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fed.engine import EngineConfig, make_fused_sim
+    from repro.fed.server import ServerConfig, make_rule_options
+    from repro.fed.workload import get_workload, make_llm_fused_data
+    from repro.models import ModelConfig
+
+    cfg = ModelConfig(
+        name="lint-lora", family="dense", num_layers=2, d_model=32,
+        vocab_size=64, num_heads=4, num_kv_heads=2, d_ff=64,
+        block_q=16, block_k=16,
+    )
+    workload = get_workload("lora", model_cfg=cfg, rank=2)
+    K = 4
+    data = make_llm_fused_data(
+        cfg, clients=K, samples_per_client=4, seq=16, n_test=4
+    )
+    bad = np.zeros((K,), bool)
+    bad[0] = True
+    scfg = ServerConfig(rule="afa", num_clients=K)
+    scan_fn, _ = make_fused_sim(
+        workload,
+        EngineConfig(scenario="byzantine", lr=0.2, momentum=0.9, dropout=False),
+        rule="afa", opts=make_rule_options(scfg, K),
+        delta_block=scfg.delta_block, num_clients=K, num_rounds=2,
+        batch_s=1, batch_b=2, bad_mask=bad,
+    )
+    params0 = workload.init_params(jax.random.PRNGKey(0))
+    return scan_fn, (params0, jnp.uint32(0), data)
 
 
 @register_check(
@@ -260,6 +342,36 @@ def _check_retrace(report: Report, scope: LintScope) -> None:
     report.extend(audit_jit_cache(
         _dispatch_tree_jit, calls, bound=bound,
         target=f"dispatch_rule_tree[fa] sweep K={list(ks)}",
+    ))
+
+    # adapter-shaped stacks (the LoRA workload's proposal trees) obey the
+    # same pow2-bucket bound — the dispatch cache must not key on tree shape
+    # beyond the bucket
+    import jax
+
+    from repro.fed.workload import init_lora_adapters
+    from repro.utils.trees import tree_broadcast_clients
+
+    adapters = init_lora_adapters(
+        jax.random.PRNGKey(0),
+        {"attn": {"wq": jnp.zeros((2, 8, 8), jnp.float32)}},
+        ("wq",), rank=2,
+    )
+    acalls = []
+    for k in ks:
+        b = pow2_bucket(k, cap)
+        acalls.append((
+            (
+                tree_broadcast_clients(adapters, b),
+                jnp.ones((b,), jnp.float32),
+                None,
+                jnp.arange(b) < k,
+            ),
+            {"name": "fa", "opts": opts, "layout": "packed"},
+        ))
+    report.extend(audit_jit_cache(
+        _dispatch_tree_jit, acalls, bound=bound,
+        target=f"dispatch_rule_tree[fa] adapter sweep K={list(ks)}",
     ))
 
     # engine builder: rebuilding the identical fused sim must be a host

@@ -140,28 +140,80 @@ def byzantine_update_tree(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def alie_update_tree(proposals, bad_mask, benign_mask, *, z_max: float = 1.2):
-    """Bad rows <- mean − z_max·std of the *benign* rows (coordinate-wise)."""
-    cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
+def alie_update_tree(
+    proposals, bad_mask, benign_mask, *, z_max: float = 1.2, axis_name=None
+):
+    """Bad rows <- mean − z_max·std of the *benign* rows (coordinate-wise).
 
-    def leaf(l):
-        mu, var = _masked_moments(l, benign_mask, cnt)
-        adv = (mu - z_max * jnp.sqrt(var)).astype(l.dtype)
-        return jnp.where(_row(bad_mask, l), adv[None], l)
+    With ``axis_name`` the proposal stack is client-sharded over that mesh
+    axis and the benign moments are made global with ONE fused collective:
+    the per-leaf partial sums, partial sums of squares, and the benign count
+    travel together in a single ``jax.lax.psum`` of one pytree (one
+    ``psum_p`` bind -> one collective per attack), then the variance is
+    assembled in the one-pass form ``E[x²] − E[x]²`` (clamped at 0 against
+    cancellation).  The unsharded path keeps the original two-pass
+    computation bit for bit."""
+    if axis_name is None:
+        cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
 
-    return jax.tree_util.tree_map(leaf, proposals)
+        def leaf(l):
+            mu, var = _masked_moments(l, benign_mask, cnt)
+            adv = (mu - z_max * jnp.sqrt(var)).astype(l.dtype)
+            return jnp.where(_row(bad_mask, l), adv[None], l)
 
+        return jax.tree_util.tree_map(leaf, proposals)
 
-def ipm_update_tree(proposals, bad_mask, benign_mask, *, eps: float = 0.5):
-    """Bad rows <- −eps · mean(benign rows): inner-product manipulation."""
-    cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
-
-    def leaf(l):
+    leaves, treedef = jax.tree_util.tree_flatten(proposals)
+    s1 = []
+    s2 = []
+    for l in leaves:
         w = _row(benign_mask, l).astype(jnp.float32)
-        mu = jnp.sum(w * l.astype(jnp.float32), axis=0) / cnt
-        return jnp.where(_row(bad_mask, l), (-eps * mu).astype(l.dtype)[None], l)
+        lf = l.astype(jnp.float32)
+        s1.append(jnp.sum(w * lf, axis=0))
+        s2.append(jnp.sum(w * lf * lf, axis=0))
+    cnt_local = jnp.sum(benign_mask.astype(jnp.float32))
+    s1, s2, cnt = jax.lax.psum((s1, s2, cnt_local), axis_name)
+    cnt = jnp.maximum(cnt, 1.0)
+    out = []
+    for l, a, b in zip(leaves, s1, s2):
+        mu = a / cnt
+        var = jnp.maximum(b / cnt - mu * mu, 0.0)
+        adv = (mu - z_max * jnp.sqrt(var)).astype(l.dtype)
+        out.append(jnp.where(_row(bad_mask, l), adv[None], l))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
-    return jax.tree_util.tree_map(leaf, proposals)
+
+def ipm_update_tree(
+    proposals, bad_mask, benign_mask, *, eps: float = 0.5, axis_name=None
+):
+    """Bad rows <- −eps · mean(benign rows): inner-product manipulation.
+
+    With ``axis_name`` the benign mean goes global through ONE fused
+    ``psum`` of (per-leaf partial sums, benign count) — see
+    :func:`alie_update_tree`."""
+    if axis_name is None:
+        cnt = jnp.maximum(jnp.sum(benign_mask.astype(jnp.float32)), 1.0)
+
+        def leaf(l):
+            w = _row(benign_mask, l).astype(jnp.float32)
+            mu = jnp.sum(w * l.astype(jnp.float32), axis=0) / cnt
+            return jnp.where(_row(bad_mask, l), (-eps * mu).astype(l.dtype)[None], l)
+
+        return jax.tree_util.tree_map(leaf, proposals)
+
+    leaves, treedef = jax.tree_util.tree_flatten(proposals)
+    s1 = [
+        jnp.sum(_row(benign_mask, l).astype(jnp.float32) * l.astype(jnp.float32), axis=0)
+        for l in leaves
+    ]
+    cnt_local = jnp.sum(benign_mask.astype(jnp.float32))
+    s1, cnt = jax.lax.psum((s1, cnt_local), axis_name)
+    cnt = jnp.maximum(cnt, 1.0)
+    out = [
+        jnp.where(_row(bad_mask, l), (-eps * (a / cnt)).astype(l.dtype)[None], l)
+        for l, a in zip(leaves, s1)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def apply_update_attack(
@@ -176,13 +228,17 @@ def apply_update_attack(
     z_max: float = 1.2,
     eps: float = 0.5,
     client_ids=None,
+    axis_name=None,
 ):
     """Static dispatch (scenario is a Python string, resolved at trace time)
     of the update-level attacks on stacked proposals.  Data-level scenarios
     (clean/flipping/noisy) poison shards before training and are a no-op here.
     ``client_ids`` maps rows to original client ids when the stack has been
     compacted (byzantine noise is keyed per client id; alie/ipm draw no RNG
-    and their benign-masked moments are compaction-invariant).
+    and their benign-masked moments are compaction-invariant).  ``axis_name``
+    names the mesh axis when the stack is client-sharded: byzantine is
+    row-local (no communication), alie/ipm globalize their benign moments
+    with one fused psum each.
     """
     if scenario == "byzantine":
         return byzantine_update_tree(
@@ -190,7 +246,11 @@ def apply_update_attack(
             client_ids=client_ids,
         )
     if scenario == "alie":
-        return alie_update_tree(proposals, bad_mask, benign_mask, z_max=z_max)
+        return alie_update_tree(
+            proposals, bad_mask, benign_mask, z_max=z_max, axis_name=axis_name
+        )
     if scenario == "ipm":
-        return ipm_update_tree(proposals, bad_mask, benign_mask, eps=eps)
+        return ipm_update_tree(
+            proposals, bad_mask, benign_mask, eps=eps, axis_name=axis_name
+        )
     return proposals

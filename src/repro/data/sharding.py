@@ -19,20 +19,32 @@ def iid_shards(x: np.ndarray, y: np.ndarray, num_clients: int, seed: int = 0):
     return [(x[p], y[p]) for p in parts]
 
 
+def _stack_dtype(a: np.ndarray):
+    """Device dtype of a stacked shard: integer features (e.g. token ids)
+    stay int32, everything else is cast to float32 (the classification
+    path's historical behaviour)."""
+    return np.int32 if np.issubdtype(a.dtype, np.integer) else np.float32
+
+
 def padded_stack(shards):
     """Ragged client shards -> device-ready padded stacks.
 
-    Returns ``(x (K, n_max, d) float32, y (K, n_max) int32, lengths (K,)
-    int32)``.  Shard k occupies rows ``[0, lengths[k])``; the tail is
-    zero-padded.  The fused engine draws minibatch indices on device as
-    ``randint(0, lengths[k])`` per client, so padding rows are never sampled
-    — they only buy every client a common shape for ``vmap``/``scan``.
+    Returns ``(x (K, n_max, *feat), y (K, n_max, *lab), lengths (K,) int32)``
+    — the per-example trailing shape is whatever the workload's shards carry
+    (``(d,)`` float features for the classification DNN, ``(seq,)`` int32
+    token windows for the LM workload; labels are scalar classes or
+    ``(seq,)`` next-token targets).  Shard k occupies rows
+    ``[0, lengths[k])``; the tail is zero-padded.  The fused engine draws
+    minibatch indices on device as ``randint(0, lengths[k])`` per client, so
+    padding rows are never sampled — they only buy every client a common
+    shape for ``vmap``/``scan``.
     """
     K = len(shards)
     n_max = max(len(x) for x, _ in shards)
-    dim = shards[0][0].shape[1]
-    x_pad = np.zeros((K, n_max, dim), np.float32)
-    y_pad = np.zeros((K, n_max), np.int32)
+    x0 = np.asarray(shards[0][0])
+    y0 = np.asarray(shards[0][1])
+    x_pad = np.zeros((K, n_max) + x0.shape[1:], _stack_dtype(x0))
+    y_pad = np.zeros((K, n_max) + y0.shape[1:], np.int32)
     lengths = np.zeros((K,), np.int32)
     for k, (x, y) in enumerate(shards):
         n = len(x)
@@ -70,8 +82,15 @@ def compact_stack(x_pad, y_pad, lengths, keep, pad_to: int | None = None):
             f"rows; refusing to truncate live clients"
         )
     live = keep >= 0
-    x_c = np.where(live[:, None, None], x_pad[np.maximum(keep, 0)], 0).astype(x_pad.dtype)
-    y_c = np.where(live[:, None], y_pad[np.maximum(keep, 0)], 0).astype(y_pad.dtype)
+
+    def _gather(stack):
+        # mask broadcast against whatever trailing shard shape the workload
+        # stacked (features, token windows, ...)
+        row = live.reshape((-1,) + (1,) * (stack.ndim - 1))
+        return np.where(row, stack[np.maximum(keep, 0)], 0).astype(stack.dtype)
+
+    x_c = _gather(x_pad)
+    y_c = _gather(y_pad)
     len_c = np.where(live, np.asarray(lengths)[np.maximum(keep, 0)], 1).astype(
         np.asarray(lengths).dtype
     )

@@ -48,6 +48,13 @@ with K the FULL client count — injective over (round, client), so keys never
 collide across rounds (the old ``PRNGKey(round * 1000 + k)`` collided as soon
 as K >= 1000) and never collide with the attack stream (``fold_in(PRNGKey(
 seed), round)``) or the device minibatch stream (under ``BATCH_STREAM``).
+
+The model enters only through a :class:`~repro.fed.workload.ClientWorkload`
+(``local_update`` produces one client's proposal, ``codec`` maps params <->
+proposal space, ``eval_metric`` scores the carry): the engines are
+model-agnostic and the proposal pytree the attack/aggregation layers see is
+whatever the workload proposes — full params for the paper DNN, a low-rank
+adapter tree for the LLM workload.
 """
 
 from __future__ import annotations
@@ -60,7 +67,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.attacks import UPDATE_ATTACK_SCENARIOS, apply_update_attack
-from repro.fed.client import local_sgd
 from repro.utils.trees import tree_broadcast_clients, tree_select_rows
 
 # shard_map moved out of jax.experimental after 0.4.x; support both homes so
@@ -70,11 +76,15 @@ if hasattr(jax, "shard_map"):
 else:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-# scenarios whose proposal transform touches only its own client row — the
-# client-sharded engine requires this (alie/ipm compute cross-client moments
-# of the benign cohort, which would silently become shard-local under
-# shard_map; they stay on the single-device engines until made axis-aware)
+# scenarios whose proposal transform touches only its own client row — these
+# run client-sharded with no cross-shard communication at the attack layer
 ROW_LOCAL_SCENARIOS = ("clean", "flipping", "noisy", "byzantine")
+
+# alie/ipm need global moments of the benign cohort; under shard_map they
+# compute them with ONE fused pytree psum over the client axis per attack
+# (repro.attacks — ``axis_name`` plumbed from the engine), so the sharded
+# engine runs the full attack matrix
+SHARDABLE_SCENARIOS = ROW_LOCAL_SCENARIOS + ("alie", "ipm")
 
 
 class EngineConfig(NamedTuple):
@@ -127,52 +137,57 @@ def attack_key(seed: int, rnd: int) -> jnp.ndarray:
 
 
 def _train_and_attack(
-    loss_fn, cfg: EngineConfig, params, batch, keys, train_mask, bad_mask,
-    benign_mask, akey, client_ids=None,
+    workload, cfg: EngineConfig, params, batch, keys, train_mask, bad_mask,
+    benign_mask, akey, client_ids=None, client_axis=None,
 ):
-    """The shared proposal pipeline: vmapped local SGD over the stacked
-    client axis, non-trainer rows reset to ``w_t``, update-level attacks
-    applied by mask.  ONE implementation traced by both the batched per-round
-    step and the fused scan body, so the engines cannot drift apart.
-    ``client_ids`` maps rows to original client ids under compaction (None =
-    identity layout)."""
+    """The shared proposal pipeline: vmapped local training over the stacked
+    client axis, non-trainer rows reset to the current proposal-space point
+    ``w_t``, update-level attacks applied by mask.  ONE implementation traced
+    by both the batched per-round step and the fused scan body, so the
+    engines cannot drift apart.  ``client_ids`` maps rows to original client
+    ids under compaction (None = identity layout); ``client_axis`` names the
+    mesh axis when the stack is client-sharded (alie/ipm psum their benign
+    moments over it)."""
     K = train_mask.shape[0]
+    # the reference point attacks perturb and non-trainers hold: the current
+    # params projected to proposal space (identity for full-param workloads,
+    # the adapter tree for delta workloads)
+    w_prev = workload.codec.proposal_of(params)
 
     def train_one(cbatch, ckey):
-        return local_sgd(
-            loss_fn, params, cbatch, ckey,
-            lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
-        )
+        return workload.local_update(cfg, params, cbatch, ckey)
 
     proposals = jax.vmap(train_one)(batch, keys)
     # non-trainers hold w_t until the attack layer overwrites their row
     proposals = tree_select_rows(
-        train_mask, proposals, tree_broadcast_clients(params, K)
+        train_mask, proposals, tree_broadcast_clients(w_prev, K)
     )
     return apply_update_attack(
-        cfg.scenario, proposals, params, bad_mask, benign_mask, akey,
+        cfg.scenario, proposals, w_prev, bad_mask, benign_mask, akey,
         byzantine_scale=cfg.byzantine_scale,
         z_max=cfg.alie_z_max,
         eps=cfg.ipm_eps,
         client_ids=client_ids,
+        axis_name=client_axis,
     )
 
 
 @functools.lru_cache(maxsize=64)
-def make_train_attack_step(loss_fn, cfg: EngineConfig):
+def make_train_attack_step(workload, cfg: EngineConfig):
     """Build the jit'd proposal producer.
 
     Returns ``step(params, batch, keys, train_mask, bad_mask, benign_mask,
     akey) -> stacked proposals``, where ``batch`` leaves are
-    ``(K, S, b, ...)``, masks are ``(K,)`` bool, and the result is a pytree
-    with a leading client axis on every leaf.  Cached on (loss_fn, cfg) so
-    repeated simulations reuse the compiled step.
+    ``(K, S, b, ...)``, masks are ``(K,)`` bool, and the result is a
+    proposal-space pytree with a leading client axis on every leaf.  Cached
+    on (workload, cfg) — workloads are frozen dataclasses, so reconstructing
+    an equal workload reuses the compiled step.
     """
 
     @jax.jit
     def step(params, batch, keys, train_mask, bad_mask, benign_mask, akey):
         return _train_and_attack(
-            loss_fn, cfg, params, batch, keys, train_mask, bad_mask,
+            workload, cfg, params, batch, keys, train_mask, bad_mask,
             benign_mask, akey,
         )
 
@@ -187,12 +202,12 @@ def make_train_attack_step(loss_fn, cfg: EngineConfig):
 class FusedData(NamedTuple):
     """Device-resident inputs of the fused simulation (all jnp arrays)."""
 
-    x: jnp.ndarray        # (K, n_max, d) zero-padded client shards
-    y: jnp.ndarray        # (K, n_max) int32 labels
+    x: jnp.ndarray        # (K, n_max, *feat) zero-padded client shards
+    y: jnp.ndarray        # (K, n_max, *lab) int32 labels
     lengths: jnp.ndarray  # (K,) int32 live rows per shard
     n_k: jnp.ndarray      # (K,) float32 aggregation data weights
-    x_test: jnp.ndarray   # (n_test, d)
-    y_test: jnp.ndarray   # (n_test,) int32
+    x_test: jnp.ndarray   # (n_test, *feat)
+    y_test: jnp.ndarray   # (n_test, *lab) int32
 
 
 class FusedTrajectory(NamedTuple):
@@ -204,8 +219,8 @@ class FusedTrajectory(NamedTuple):
 
 
 def _round_body(
-    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block, agg_layout,
-    num_clients_total, batch_s, batch_b,
+    workload, cfg: EngineConfig, rule, opts, delta_block, agg_layout,
+    num_clients_total, batch_s, batch_b, client_axis,
     carry, rnd, seed, data: FusedData, bad, client_ids,
 ):
     """ONE fused round, parameterized over a (possibly compacted) client
@@ -253,17 +268,20 @@ def _round_body(
         "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
     }
     proposals = _train_and_attack(
-        loss_fn, cfg, params, batch,
+        workload, cfg, params, batch,
         client_keys_traced(seed, rnd, ids, num_clients_total),
         train_mask, bad & mask0, mask0 & ~bad,
         jax.random.fold_in(base, rnd),
         client_ids=ids,
+        client_axis=client_axis,
     )
 
     if agg_layout == "packed":
-        from repro.utils.trees import pack_spec, pack_stack, unpack_stack
+        from repro.utils.trees import pack_stack, unpack_stack
 
-        pspec = pack_spec(params)  # row template: one client's update layout
+        # row template: one client's proposal layout (= params for full-param
+        # workloads, the adapter tree for delta workloads)
+        pspec = workload.delta_spec(params)
         state, res = server_step(
             state, pack_stack(proposals, pspec), data.n_k, mask0,
             rule=rule, opts=opts, delta_block=delta_block, layout="packed",
@@ -275,13 +293,17 @@ def _round_body(
             rule=rule, opts=opts, delta_block=delta_block, layout=agg_layout,
         )
         aggregate = res.aggregate
-    # empty-participation guard: a zero update keeps the previous params
-    # (identity, bit for bit, whenever any client is live)
-    params = jax.tree_util.tree_map(
+    # empty-participation guard: a zero update keeps the previous proposal
+    # point (identity, bit for bit, whenever any client is live); the guard
+    # runs in proposal space so delta workloads never where-select the
+    # frozen base
+    w_prev = workload.codec.proposal_of(params)
+    aggregate = jax.tree_util.tree_map(
         lambda prev, new: jnp.where(res.all_blocked, prev, new),
-        params, aggregate,
+        w_prev, aggregate,
     )
-    err = err_fn(params, data.x_test, data.y_test)
+    params = workload.codec.apply(params, aggregate)
+    err = workload.eval_metric(params, data.x_test, data.y_test)
     out = FusedTrajectory(err, res.good_mask, state.reputation.blocked)
     return (params, state), out
 
@@ -290,8 +312,7 @@ AGG_LAYOUTS = ("packed", "tree", "leaf")
 
 
 def make_fused_sim(
-    loss_fn,
-    err_fn,
+    workload,
     cfg: EngineConfig,
     *,
     rule: str,
@@ -338,14 +359,15 @@ def make_fused_sim(
     (``fed/server.make_rule_options`` does).  A one-shard mesh degenerates
     to the unsharded code path bit for bit.
 
-    Cached on the full static signature so repeated simulations (benchmark
-    repeats, sweep construction) reuse the compiled scan.
+    Cached on the full static signature — ``workload`` is a hashable frozen
+    dataclass (:mod:`repro.fed.workload`) — so repeated simulations
+    (benchmark repeats, sweep construction) reuse the compiled scan.
     """
     if agg_layout not in AGG_LAYOUTS:
         raise ValueError(f"unknown agg_layout {agg_layout!r}; expected {AGG_LAYOUTS}")
     _validate_client_mesh(client_mesh, cfg, rule, agg_layout, int(num_clients))
     return _make_fused_sim_cached(
-        loss_fn, err_fn, cfg, rule, opts, float(delta_block),
+        workload, cfg, rule, opts, float(delta_block),
         int(num_clients), int(num_rounds), int(batch_s), int(batch_b),
         tuple(bool(b) for b in np.asarray(bad_mask)), float(alpha0), float(beta0),
         agg_layout, client_mesh,
@@ -365,10 +387,10 @@ def _validate_client_mesh(mesh, cfg: EngineConfig, rule, agg_layout, num_rows):
         )
     shards = int(mesh.shape[axis])
     if shards > 1:
-        if cfg.scenario not in ROW_LOCAL_SCENARIOS:
+        if cfg.scenario not in SHARDABLE_SCENARIOS:
             raise ValueError(
-                f"scenario {cfg.scenario!r} is not row-local and cannot run "
-                f"client-sharded (supported: {ROW_LOCAL_SCENARIOS})"
+                f"scenario {cfg.scenario!r} has no client-sharded form "
+                f"(supported: {SHARDABLE_SCENARIOS})"
             )
         if rule != "afa":
             raise ValueError(
@@ -389,16 +411,17 @@ def _validate_client_mesh(mesh, cfg: EngineConfig, rule, agg_layout, num_rows):
 
 @functools.lru_cache(maxsize=32)
 def _make_fused_sim_cached(
-    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    workload, cfg: EngineConfig, rule, opts, delta_block,
     num_clients, num_rounds, batch_s, batch_b, bad_tuple, alpha0, beta0,
     agg_layout, client_mesh=None,
 ):
     K = num_clients
     bad = jnp.asarray(bad_tuple)
     ids = jnp.arange(K, dtype=jnp.uint32)
+    axis = _attack_axis(client_mesh)
     body = functools.partial(
-        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block, agg_layout,
-        K, batch_s, batch_b,
+        _round_body, workload, cfg, rule, opts, delta_block, agg_layout,
+        K, batch_s, batch_b, axis,
     )
 
     def round_fn(carry, rnd, seed, data: FusedData):
@@ -484,8 +507,7 @@ def _client_shard_specs(axis: str):
 
 
 def make_fused_segment(
-    loss_fn,
-    err_fn,
+    workload,
     cfg: EngineConfig,
     *,
     rule: str,
@@ -538,7 +560,7 @@ def make_fused_segment(
         0 if client_mesh is None else int(bucket_rows) * _mesh_shards(client_mesh),
     )
     return _make_fused_segment_cached(
-        loss_fn, err_fn, cfg, rule, opts, float(delta_block),
+        workload, cfg, rule, opts, float(delta_block),
         int(num_clients_total), int(seg_len), int(batch_s), int(batch_b),
         agg_layout, client_mesh,
     )
@@ -551,14 +573,27 @@ def _mesh_shards(mesh) -> int:
     return int(mesh.shape[axis]) if axis is not None else 1
 
 
+def _attack_axis(client_mesh) -> str | None:
+    """Mesh axis the attack layer's cross-client moments psum over — None
+    whenever the stack is not actually split (no mesh, or one shard), so the
+    one-shard mesh stays bit-identical to the unsharded engine (the sharded
+    alie/ipm use a one-pass variance form that is equivalent but not bitwise
+    equal to the single-device two-pass one)."""
+    if client_mesh is None or _mesh_shards(client_mesh) <= 1:
+        return None
+    from repro.launch.mesh import client_axis
+
+    return client_axis(client_mesh)
+
+
 @functools.lru_cache(maxsize=64)
 def _make_fused_segment_cached(
-    loss_fn, err_fn, cfg: EngineConfig, rule, opts, delta_block,
+    workload, cfg: EngineConfig, rule, opts, delta_block,
     num_clients_total, seg_len, batch_s, batch_b, agg_layout, client_mesh=None,
 ):
     body = functools.partial(
-        _round_body, loss_fn, err_fn, cfg, rule, opts, delta_block, agg_layout,
-        num_clients_total, batch_s, batch_b,
+        _round_body, workload, cfg, rule, opts, delta_block, agg_layout,
+        num_clients_total, batch_s, batch_b, _attack_axis(client_mesh),
     )
 
     def _scan(params, state, seed, data, bad, client_ids, seg_start):
@@ -615,24 +650,22 @@ def _make_fused_segment_cached(
     return segment_fn
 
 
-def sweep_fused_sim(scan_fn, sizes, seeds, data: FusedData):
+def sweep_fused_sim(scan_fn, workload, seeds, data: FusedData):
     """vmap the fused simulation over a seed axis: one device program runs
     the whole seed grid (ROADMAP: adaptive-attack / prior-sensitivity sweeps).
 
-    Each seed drives the model init (``init_dnn(PRNGKey(seed))``), the device
-    minibatch stream, and the attack-noise stream.  The shard split itself is
-    host-side and fixed across the sweep — the sweep varies *stochasticity*,
-    not the partition.
+    Each seed drives the model init (``workload.init_params(PRNGKey(seed))``),
+    the device minibatch stream, and the attack-noise stream.  The shard
+    split itself is host-side and fixed across the sweep — the sweep varies
+    *stochasticity*, not the partition.
 
     Returns ``(params_T, state_T, traj)`` with a leading ``len(seeds)`` axis
     on every leaf.
     """
-    from repro.fed.dnn import init_dnn
-
     seeds = jnp.asarray(np.asarray(seeds, np.uint32))
 
     def one(seed):
-        params0 = init_dnn(jax.random.PRNGKey(seed), sizes)
+        params0 = workload.init_params(jax.random.PRNGKey(seed))
         return scan_fn(params0, seed, data)
 
     return jax.vmap(one)(seeds)

@@ -19,6 +19,13 @@ paper-scale looped path) or as a stacked pytree with a leading client axis
 (``aggregate_tree``, the device-resident round engines).  Both routes go
 through the single ``dispatch_rule`` / ``dispatch_rule_tree`` interface in
 ``repro.core``; AFA is the paper's rule, the others are comparison baselines.
+
+Proposals live in the **workload's proposal space** (DESIGN.md §Workload
+layer), not necessarily in full-parameter space: the paper DNN proposes
+whole models (identity codec), the LoRA workload proposes ``(K, D_adapter)``
+low-rank deltas.  Nothing here inspects the model — screening, reputation,
+and blocking only ever see update vectors — so the server layer is
+workload-agnostic by construction.
 """
 
 from __future__ import annotations

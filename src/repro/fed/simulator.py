@@ -72,8 +72,6 @@ from repro.data import (
     pow2_bucket,
     shard_compact_plan,
 )
-from repro.fed.client import local_sgd
-from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
 from repro.fed.engine import (
     EngineConfig,
     FusedData,
@@ -93,6 +91,7 @@ from repro.fed.server import (
     make_rule_options,
     scatter_server_state,
 )
+from repro.fed.workload import DnnWorkload
 from repro.utils.trees import tree_stack
 
 
@@ -176,11 +175,14 @@ class _Setup:
 
         out_units = 1 if binary else data.num_classes
         self.sizes = (data.dim, *sim.hidden, out_units)
-        self.params0 = init_dnn(jax.random.PRNGKey(sim.seed), self.sizes)
+        # the classification simulator drives the paper-DNN workload; all
+        # engines below consume it only through the ClientWorkload protocol
+        self.workload = DnnWorkload(self.sizes)
+        self.params0 = self.workload.init_params(jax.random.PRNGKey(sim.seed))
         self.n_k = np.asarray([len(x) for x, _ in self.poisoned], np.float32)
         self.x_test = jnp.asarray(data.x_test)
         self.y_test = jnp.asarray(data.y_test.astype(np.int32))
-        self.err_fn = jax.jit(dnn_error)
+        self.err_fn = jax.jit(self.workload.eval_metric)
 
         # uniform per-round minibatch geometry (both engines; stacking needs
         # one (S, b) for every client).  Keyed to the MEAN shard so skewed
@@ -287,7 +289,7 @@ def _run_batched(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Si
     K = sim.num_clients
     server = FedServer(server_cfg)
     params = setup.params0
-    step = make_train_attack_step(dnn_loss, setup.engine_config())
+    step = make_train_attack_step(setup.workload, setup.engine_config())
     dim = setup.poisoned[0][0].shape[1]
     S, b = setup.batch_s, setup.batch_b
     bad_j = jnp.asarray(setup.bad_mask)
@@ -375,9 +377,8 @@ def _run_looped(setup: _Setup, server_cfg: ServerConfig, eval_every: int) -> Sim
                 "x": jnp.asarray(x[idx[k]]),
                 "y": jnp.asarray(y[idx[k]].astype(np.int32)),
             }
-            per_client[k] = local_sgd(
-                dnn_loss, params, batches, keys[k],
-                lr=sim.lr, momentum=sim.momentum, dropout=sim.dropout,
+            per_client[k] = setup.workload.local_update(
+                ec, params, batches, keys[k]
             )
         stacked = tree_stack(per_client)
         stacked = apply_update_attack(
@@ -457,7 +458,7 @@ def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig, mesh=None):
     """Fused scan + round body for this experiment's static configuration."""
     sim = setup.sim
     return make_fused_sim(
-        dnn_loss, dnn_error, setup.engine_config(),
+        setup.workload, setup.engine_config(),
         rule=server_cfg.rule,
         opts=make_rule_options(
             server_cfg, sim.num_clients, **_client_opts_kwargs(mesh)
@@ -561,7 +562,7 @@ def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int,
     ``make_fused_segment`` — one trace per (bucket shape, seg_len))."""
     sim = setup.sim
     return make_fused_segment(
-        dnn_loss, dnn_error, setup.engine_config(),
+        setup.workload, setup.engine_config(),
         rule=server_cfg.rule,
         opts=make_rule_options(
             server_cfg, sim.num_clients, **_client_opts_kwargs(mesh)
@@ -723,7 +724,7 @@ def run_sweep(
         return _run_sweep_segmented(setup, server_cfg, seeds)
     fdata = _fused_data(setup)
     scan_fn, _ = _make_setup_sim(setup, server_cfg)
-    _, state, traj = sweep_fused_sim(scan_fn, setup.sizes, seeds, fdata)
+    _, state, traj = sweep_fused_sim(scan_fn, setup.workload, seeds, fdata)
     jax.block_until_ready(traj)
 
     return _sweep_result(setup, seeds, np.asarray(state.rounds_blocked),
@@ -757,7 +758,7 @@ def _run_sweep_segmented(
     seeds_u32 = jnp.asarray(np.asarray(seeds, np.uint32))
 
     params = jax.vmap(
-        lambda s: init_dnn(jax.random.PRNGKey(s), setup.sizes)
+        lambda s: setup.workload.init_params(jax.random.PRNGKey(s))
     )(seeds_u32)
     state0 = init_server_state(K, server_cfg.alpha0, server_cfg.beta0)
     state_full = jax.tree_util.tree_map(

@@ -1,0 +1,478 @@
+"""ClientWorkload — the pluggable client-training layer (DESIGN.md §Workload).
+
+Every round engine (looped, batched, fused, segmented, sharded) runs the same
+pipeline: *propose* (local training per client), *attack* (update-level
+transforms on the stacked proposals), *screen + aggregate* (the AFA stack),
+*apply* (fold the aggregate back into the model).  The engines used to
+hard-wire the paper's tiny DNN (``fed/dnn.py``) into that pipeline; this
+module factors the model-specific pieces behind one protocol so the same
+engines drive any workload:
+
+* ``init_params(key)`` — build the full model state (whatever the workload
+  trains on; may contain frozen parts).
+* ``local_update(cfg, params, batches, key)`` — one client's local training.
+  Returns a **proposal-space** tree: the thing clients send to the server.
+* ``codec`` (a :class:`ProposalCodec`) — the params <-> proposal-space map.
+  ``proposal_of(params)`` projects the server's current params to proposal
+  space (the reference row ``w_t`` that attacks perturb and non-trainers
+  hold); ``apply(params, aggregate)`` folds an aggregated proposal back into
+  full params.
+* ``delta_spec(params)`` — the cached :class:`~repro.utils.trees.PackSpec`
+  of one proposal row, i.e. the layout of the ``(K, D)`` buffer the
+  matrix-form rules aggregate.
+* ``eval_metric(params, x_test, y_test)`` — scalar error in [0, 1] emitted
+  per round by the fused trajectory.
+
+The key property (the source paper's, arXiv:1909.05125): AFA's screening is
+cosine similarity of *update vectors* against the weighted aggregate — it
+never looks inside the model.  So a workload whose proposal space is a
+low-rank adapter tree (``TransformerLoraWorkload``) runs the whole robust
+aggregation stack — screening, reputation, blocking, compaction, packed
+``(K, D_adapter)`` dispatch — unmodified, on a buffer with
+``D_adapter ≪ D``.  The paper DNN remains available as ``DnnWorkload`` and
+is **bit-identical** through the protocol to the pre-refactor engines
+(asserted in ``tests/test_workload.py``).
+
+Workloads are frozen dataclasses (hashable by field values) and codecs are
+module-level function pairs, so they are stable cache keys for the engines'
+``lru_cache``'d builders — constructing the "same" workload twice reuses the
+compiled scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.client import local_sgd, local_sgd_frozen
+from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
+from repro.utils.trees import pack_spec, tree_size
+
+
+class ProposalCodec(NamedTuple):
+    """params <-> proposal-space map (module-level functions: stable hash).
+
+    ``proposal_of(params) -> tree`` projects full params onto the space
+    clients propose in; ``apply(params, aggregate) -> params'`` folds an
+    aggregated proposal back.  For full-parameter workloads both are
+    (near-)identities; for delta workloads ``proposal_of`` selects the
+    trainable sub-tree and ``apply`` swaps it in against the frozen rest.
+    """
+
+    proposal_of: Callable[[Any], Any]
+    apply: Callable[[Any, Any], Any]
+
+
+def _identity_proposal(params):
+    return params
+
+
+def _identity_apply(params, aggregate):
+    del params
+    return aggregate
+
+
+#: full-parameter proposals: clients send whole models, the aggregate IS the
+#: next global model (the paper's setting).
+IDENTITY_CODEC = ProposalCodec(_identity_proposal, _identity_apply)
+
+
+def _adapter_proposal(params):
+    return params["adapters"]
+
+
+def _adapter_apply(params, aggregate):
+    return {"base": params["base"], "adapters": aggregate}
+
+
+#: low-rank-delta proposals: clients send only the adapter tree; the server
+#: swaps the aggregated adapters in against the frozen base.
+ADAPTER_CODEC = ProposalCodec(_adapter_proposal, _adapter_apply)
+
+
+class ClientWorkload:
+    """Protocol base (subclasses are frozen dataclasses — see module doc).
+
+    The engines treat a workload as an opaque hashable value: it keys the
+    ``lru_cache``'d scan builders and its methods are traced into the round
+    body.  Methods must therefore be pure jax (jit/vmap/scan-safe) and the
+    instance itself must never close over tracers.
+    """
+
+    name: str = "abstract"
+    codec: ProposalCodec = IDENTITY_CODEC
+
+    def init_params(self, key):
+        raise NotImplementedError
+
+    def local_update(self, cfg, params, batches, key):
+        """One client's local training -> proposal-space tree.
+
+        ``cfg`` is the engine's :class:`~repro.fed.engine.EngineConfig`
+        (static at trace time); ``batches`` is a pytree of ``(S, b, ...)``
+        prebuilt minibatches; ``key`` the client's per-round RNG key.
+        """
+        raise NotImplementedError
+
+    def eval_metric(self, params, x_test, y_test):
+        """Scalar error in [0, 1] on the held-out set."""
+        raise NotImplementedError
+
+    def delta_spec(self, params):
+        """PackSpec of one proposal row — the ``(K, D)`` buffer layout."""
+        return pack_spec(self.codec.proposal_of(params))
+
+    def proposal_dim(self, params) -> int:
+        """D: flattened size of one proposal row."""
+        return tree_size(self.codec.proposal_of(params))
+
+    def param_dim(self, params) -> int:
+        """Total model size (frozen + trainable)."""
+        return tree_size(params)
+
+
+# ---------------------------------------------------------------------------
+# DnnWorkload — the paper's DNN, bit-identical through the protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DnnWorkload(ClientWorkload):
+    """The paper's MNIST/Spambase DNN as a workload (the reference).
+
+    ``local_update`` is a literal pass-through to ``local_sgd(dnn_loss, ...)``
+    with the identical argument spelling the engines used before the workload
+    seam existed, and the codec is the identity — the traced round body is
+    the same jaxpr, so trajectories are bit-identical to the pre-refactor
+    engines (``tests/test_workload.py`` holds the line).
+    """
+
+    sizes: tuple  # (d_in, *hidden, d_out)
+
+    name = "dnn"
+    codec = IDENTITY_CODEC
+
+    def __post_init__(self):
+        object.__setattr__(self, "sizes", tuple(int(s) for s in self.sizes))
+
+    def init_params(self, key):
+        return init_dnn(key, self.sizes)
+
+    def local_update(self, cfg, params, batches, key):
+        return local_sgd(
+            dnn_loss, params, batches, key,
+            lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
+        )
+
+    def eval_metric(self, params, x_test, y_test):
+        return dnn_error(params, x_test, y_test)
+
+
+# ---------------------------------------------------------------------------
+# TransformerLoraWorkload — federated LLM fine-tuning on low-rank deltas
+# ---------------------------------------------------------------------------
+#
+# Clients hold a frozen transformer base (models/ stack: vmapped per-layer
+# init, jax.checkpoint'd scan over layers) and train only LoRA adapters on
+# the stacked attention projections: for each target matrix W (L, d_in,
+# d_out) an A (L, d_in, r) / B (L, r, d_out) pair with B zero-initialised,
+# merged as W + (alpha/r) * A @ B per layer.  The proposal space is the
+# adapter tree, so the packed aggregation buffer is (K, D_adapter) with
+# D_adapter ≪ D, and every update-level attack (byzantine/alie/ipm) operates
+# on adapters for free — w_prev handed to the attack layer is the current
+# adapter state.
+#
+# The model/loss builders are module-level lru_caches keyed on the hashable
+# ModelConfig so the jit identity of the round body is stable across workload
+# re-construction (same reason local_sgd_frozen takes the frozen base as a
+# *traced* argument instead of closing over it).
+
+
+@functools.lru_cache(maxsize=8)
+def _lora_model(model_cfg):
+    from repro.models import build_model
+
+    return build_model(model_cfg)
+
+
+def _adapter_sites(layers, targets):
+    """(path, shape) of every stacked ``(L, d_in, d_out)`` leaf whose final
+    key names a LoRA target, in deterministic (dict-order) traversal."""
+    sites = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (k,))
+        elif path and path[-1] in targets and getattr(node, "ndim", 0) == 3:
+            sites.append((path, node.shape))
+
+    walk(layers, ())
+    return sites
+
+
+def init_lora_adapters(key, layers, targets, rank: int):
+    """Adapter tree mirroring ``layers``: at each target leaf a
+    ``{"a": (L, d_in, r), "b": (L, r, d_out)}`` pair, A ~ N(0, 1/d_in),
+    B = 0 — so the initial delta is exactly zero and round 0 starts from the
+    frozen base."""
+    sites = _adapter_sites(layers, targets)
+    if not sites:
+        raise ValueError(
+            f"no LoRA target leaves {targets!r} found in the layer stack"
+        )
+    keys = jax.random.split(key, len(sites))
+    adapters: dict = {}
+    for k, (path, shape) in zip(keys, sites):
+        L, d_in, d_out = shape
+        a = jax.random.normal(k, (L, d_in, rank), jnp.float32) / np.sqrt(d_in)
+        b = jnp.zeros((L, rank, d_out), jnp.float32)
+        node = adapters
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = {"a": a, "b": b}
+    return adapters
+
+
+def merge_lora(layers, adapters, scaling: float):
+    """Effective layer stack: target leaves get ``W + scaling * A @ B``
+    (batched over the layer axis), everything else passes through."""
+
+    def walk(node, anode):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            sub = anode.get(k) if isinstance(anode, dict) else None
+            if isinstance(sub, dict) and set(sub) == {"a", "b"} and not isinstance(v, dict):
+                delta = jnp.einsum("lir,lro->lio", sub["a"], sub["b"]) * scaling
+                out[k] = (v.astype(jnp.float32) + delta).astype(v.dtype)
+            else:
+                out[k] = walk(v, sub)
+        return out
+
+    return walk(layers, adapters)
+
+
+def _merged_params(base, adapters, scaling: float):
+    eff = dict(base)
+    eff["layers"] = merge_lora(base["layers"], adapters, scaling)
+    return eff
+
+
+@functools.lru_cache(maxsize=8)
+def _lora_loss_fn(model_cfg, targets, scaling: float):
+    """Loss over (frozen base, adapters) with the engine's ``{"x","y"}``
+    batch convention mapped to the LM's ``{"tokens","labels"}``.  Accepts
+    (and ignores) ``dropout_rng`` so the client RNG stream is spelled exactly
+    like the DNN path's."""
+    model = _lora_model(model_cfg)
+
+    def loss(base, adapters, mb, *, dropout_rng=None):
+        del dropout_rng  # the LM stack is deterministic; key split still happens
+        eff = _merged_params(base, adapters, scaling)
+        return model.loss_fn(eff, {"tokens": mb["x"], "labels": mb["y"]})[0]
+
+    return loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLoraWorkload(ClientWorkload):
+    """Federated LLM fine-tuning: clients propose LoRA deltas on a frozen
+    transformer base (see the section comment above)."""
+
+    model_cfg: Any  # repro.models.ModelConfig (frozen dataclass, hashable)
+    rank: int = 4
+    alpha: float = 8.0
+    targets: tuple = ("wq", "wk", "wv", "wo")
+
+    name = "lora"
+    codec = ADAPTER_CODEC
+
+    def __post_init__(self):
+        object.__setattr__(self, "targets", tuple(self.targets))
+
+    @property
+    def scaling(self) -> float:
+        return float(self.alpha) / float(self.rank)
+
+    def init_params(self, key):
+        k_base, k_adapt = jax.random.split(key)
+        base = _lora_model(self.model_cfg).init(k_base)
+        adapters = init_lora_adapters(
+            k_adapt, base["layers"], self.targets, self.rank
+        )
+        return {"base": base, "adapters": adapters}
+
+    def local_update(self, cfg, params, batches, key):
+        loss = _lora_loss_fn(self.model_cfg, self.targets, self.scaling)
+        return local_sgd_frozen(
+            loss, params["base"], params["adapters"], batches, key,
+            lr=cfg.lr, momentum=cfg.momentum, dropout=cfg.dropout,
+        )
+
+    def eval_metric(self, params, x_test, y_test):
+        """Masked next-token error: fraction of (label >= 0) positions where
+        the greedy prediction misses."""
+        model = _lora_model(self.model_cfg)
+        eff = _merged_params(params["base"], params["adapters"], self.scaling)
+        logits = model.forward(eff, {"tokens": x_test})
+        pred = jnp.argmax(logits, axis=-1)
+        mask = y_test >= 0
+        wrong = jnp.sum(((pred != y_test) & mask).astype(jnp.float32))
+        return wrong / jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+
+    def merged_params(self, params):
+        """Full effective model (base + scaled deltas) — inference/export."""
+        return _merged_params(params["base"], params["adapters"], self.scaling)
+
+
+# ---------------------------------------------------------------------------
+# registry — the launch CLI routes --arch / --workload through here
+# ---------------------------------------------------------------------------
+
+
+def _build_dnn(*, sizes, **_ignored) -> DnnWorkload:
+    return DnnWorkload(sizes=tuple(sizes))
+
+
+def _build_lora(
+    *, arch: str = "smollm-135m", reduced: bool = True, rank: int = 4,
+    alpha: float = 8.0, model_cfg=None, clients: int | None = None, **_ignored,
+) -> TransformerLoraWorkload:
+    if model_cfg is None:
+        from repro.configs import get_config
+
+        model_cfg = get_config(arch)
+        if reduced:
+            model_cfg = model_cfg.reduced().with_(
+                param_dtype="float32", compute_dtype="float32"
+            )
+    if clients is not None:
+        model_cfg = model_cfg.with_(fed_clients=int(clients))
+    return TransformerLoraWorkload(model_cfg=model_cfg, rank=rank, alpha=alpha)
+
+
+WORKLOADS: dict[str, Callable[..., ClientWorkload]] = {
+    "dnn": _build_dnn,
+    "lora": _build_lora,
+}
+
+
+def get_workload(name: str, **kwargs) -> ClientWorkload:
+    """Build a registered workload: ``get_workload("dnn", sizes=(...))`` or
+    ``get_workload("lora", arch="smollm-135m", reduced=True, rank=4)``."""
+    if name not in WORKLOADS:
+        raise ValueError(f"unknown workload {name!r}; expected {sorted(WORKLOADS)}")
+    return WORKLOADS[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# fused-engine driver for the LLM workload (examples / CI smoke / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def make_llm_fused_data(
+    model_cfg, *, clients: int, samples_per_client: int = 16, seq: int = 32,
+    n_test: int = 16, seed: int = 0,
+):
+    """Device-ready :class:`~repro.fed.engine.FusedData` over the synthetic
+    bigram-markov token stream: per-client ``(n, seq)`` int32 token/label
+    shards stacked to ``(K, n, seq)`` plus a held-out eval batch.  Shapes are
+    exactly what the fused engine's generic per-client gather expects — the
+    trailing shard shape is opaque to the engine."""
+    from repro.data import make_token_stream
+    from repro.data.sharding import padded_stack
+    from repro.fed.engine import FusedData
+
+    need = (clients * samples_per_client + n_test) * (seq + 1)
+    stream = make_token_stream(
+        seed=seed, vocab=model_cfg.vocab_size, n=max(4 * need, 8_192)
+    )
+    rng = np.random.default_rng(seed)
+    shards = []
+    for _ in range(clients):
+        b = next(iter(stream.batches(rng, batch=samples_per_client, seq=seq, n_batches=1)))
+        shards.append(
+            (np.asarray(b["tokens"], np.int32), np.asarray(b["labels"], np.int32))
+        )
+    x, y, lengths = padded_stack(shards)
+    tb = next(iter(stream.batches(rng, batch=n_test, seq=seq, n_batches=1)))
+    return FusedData(
+        x=jnp.asarray(x), y=jnp.asarray(y),
+        lengths=jnp.asarray(lengths),
+        n_k=jnp.asarray(lengths, jnp.float32),
+        x_test=jnp.asarray(tb["tokens"]), y_test=jnp.asarray(tb["labels"]),
+    )
+
+
+def run_llm_simulation(
+    workload: TransformerLoraWorkload,
+    *,
+    clients: int = 6,
+    byzantine: int = 2,
+    rounds: int = 6,
+    local_steps: int = 2,
+    batch: int = 2,
+    samples_per_client: int = 16,
+    seq: int = 32,
+    n_test: int = 16,
+    seed: int = 0,
+    lr: float = 0.2,
+    scenario: str = "byzantine",
+    rule: str = "afa",
+    data=None,
+):
+    """Run the fused T-round simulation on the LLM workload and summarize.
+
+    The first ``byzantine`` clients run the update-level attack ``scenario``
+    (on the *adapter* proposals — the attack layer is workload-agnostic);
+    AFA screens the packed ``(K, D_adapter)`` buffer, reputation accumulates,
+    and blocking kicks the attackers out of the aggregate.  Returns a dict of
+    host numpy results (trajectory, blocking, buffer geometry).
+    """
+    from repro.fed.engine import EngineConfig, make_fused_sim
+    from repro.fed.server import ServerConfig, make_rule_options
+
+    if data is None:
+        data = make_llm_fused_data(
+            workload.model_cfg, clients=clients,
+            samples_per_client=samples_per_client, seq=seq, n_test=n_test,
+            seed=seed,
+        )
+    bad = np.zeros((clients,), bool)
+    bad[:byzantine] = True
+
+    cfg = EngineConfig(scenario=scenario, lr=lr, momentum=0.9, dropout=False)
+    scfg = ServerConfig(
+        rule=rule, num_clients=clients,
+        num_byzantine=max(byzantine, 1), trim=max(min(byzantine, (clients - 1) // 2), 1),
+    )
+    scan_fn, _ = make_fused_sim(
+        workload, cfg, rule=rule, opts=make_rule_options(scfg, clients),
+        delta_block=scfg.delta_block, num_clients=clients, num_rounds=rounds,
+        batch_s=local_steps, batch_b=batch, bad_mask=bad, agg_layout="packed",
+    )
+    params0 = workload.init_params(jax.random.PRNGKey(seed))
+    params, state, traj = scan_fn(params0, np.uint32(seed), data)
+    jax.block_until_ready(traj.test_error)
+
+    d_adapter = workload.proposal_dim(params0)
+    d_total = workload.param_dim(params0)
+    good_frac = np.asarray(traj.good_mask, np.float32).mean(axis=1)
+    return {
+        "test_error": np.asarray(traj.test_error),
+        "good_frac": good_frac,
+        "blocked": np.asarray(traj.blocked),
+        "rounds_blocked": np.asarray(state.rounds_blocked),
+        "bad_mask": bad,
+        "adapter_dim": int(d_adapter),
+        "param_dim": int(d_total),
+        "adapter_fraction": float(d_adapter) / float(d_total),
+        "params": params,
+    }

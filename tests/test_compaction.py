@@ -205,8 +205,10 @@ def test_all_blocked_fused_round_keeps_previous_params():
         y_test=jnp.asarray(RNG.integers(0, 3, 20).astype(np.int32)),
     )
     server_cfg = ServerConfig(rule="afa", num_clients=K)
+    from repro.fed.workload import DnnWorkload
+
     seg_fn = make_fused_segment(
-        dnn_loss, dnn_error, EngineConfig(dropout=False),
+        DnnWorkload(sizes), EngineConfig(dropout=False),
         rule="afa", opts=make_rule_options(server_cfg, K),
         delta_block=server_cfg.delta_block,
         num_clients_total=K, seg_len=seg_len, batch_s=2, batch_b=4,

@@ -133,6 +133,138 @@ print("FOUR_SHARD_EQUIVALENT")
 """
 
 
+# ---------------------------------------------------------------------------
+# sharded cross-client attacks: alie/ipm under a client mesh, one psum each
+# ---------------------------------------------------------------------------
+
+ATTACK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.analysis import collective_uses
+from repro.attacks import apply_update_attack
+from repro.launch.mesh import client_axis, make_client_mesh
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
+
+K = 16
+rng = np.random.default_rng(3)
+proposals = {
+    "w": jnp.asarray(rng.normal(size=(K, 33, 2)).astype(np.float32)),
+    "b": jnp.asarray(rng.normal(size=(K, 7)).astype(np.float32)),
+}
+w_prev = {
+    "w": jnp.zeros((33, 2), jnp.float32), "b": jnp.zeros((7,), jnp.float32)
+}
+bad = np.zeros((K,), bool); bad[:5] = True
+bad = jnp.asarray(bad)
+benign = ~bad
+key = jax.random.PRNGKey(0)
+mesh = make_client_mesh(4)
+axis = client_axis(mesh)
+row = {"w": P(axis), "b": P(axis)}
+rep = {"w": P(), "b": P()}
+
+for scenario in ("alie", "ipm"):
+    ref = apply_update_attack(scenario, proposals, w_prev, bad, benign, key)
+
+    def attacked(props, prev, bad_rows, benign_rows):
+        return apply_update_attack(
+            scenario, props, prev, bad_rows, benign_rows, key, axis_name=axis
+        )
+
+    sharded = shard_map(
+        attacked, mesh=mesh,
+        in_specs=(row, rep, P(axis), P(axis)), out_specs=row,
+        check_rep=False,
+    )
+    got = sharded(proposals, w_prev, bad, benign)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(got)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+        )
+    # the cross-shard moments contract: ONE fused psum per attack, no other
+    # collective anywhere in the attacked shard body
+    uses = collective_uses(sharded, proposals, w_prev, bad, benign)
+    assert [u.primitive for u in uses] == ["psum"], uses
+    print(scenario.upper() + "_SHARDED_ONE_PSUM")
+"""
+
+
+def test_sharded_attacks_match_and_use_one_psum():
+    """alie/ipm on a 4-way client mesh match the single-device transforms
+    (one-pass vs two-pass moments: allclose) and globalize their benign
+    moments with exactly ONE fused psum per attack."""
+    assert len(jax.devices()) == 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", ATTACK_SCRIPT], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ALIE_SHARDED_ONE_PSUM" in out.stdout
+    assert "IPM_SHARDED_ONE_PSUM" in out.stdout
+
+
+FUSED_ATTACK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.data import make_spambase_like
+from repro.fed.simulator import SimConfig, run_simulation
+from repro.fed.server import ServerConfig
+
+K = 16
+data = make_spambase_like(n_train=480, n_test=160, dim=24, seed=0)
+
+
+def run(shards, scenario):
+    sim = SimConfig(
+        num_clients=K, bad_frac=0.25, scenario=scenario, rounds=8,
+        local_epochs=1, batch_size=16, hidden=(8,), engine="fused",
+        client_shards=shards, seed=0,
+    )
+    return run_simulation(data, sim, ServerConfig(rule="afa", num_clients=K))
+
+
+for scenario in ("alie", "ipm"):
+    ref = run(0, scenario)
+    four = run(4, scenario)
+    np.testing.assert_allclose(
+        np.asarray(ref.test_error), np.asarray(four.test_error),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert np.array_equal(
+        np.stack(ref.good_mask_history), np.stack(four.good_mask_history)
+    ), scenario + " screening masks drifted"
+    assert np.array_equal(ref.blocked_round, four.blocked_round), scenario
+    print(scenario.upper() + "_FUSED_SHARDED_EQUIVALENT")
+"""
+
+
+def test_client_sharded_attack_matrix_trajectory_parity():
+    """The full fused trajectory under alie/ipm (previously a ValueError for
+    client_shards > 1) matches the single-device engine on a 4-way client
+    mesh: the sharded engine now runs the complete attack matrix."""
+    assert len(jax.devices()) == 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", FUSED_ATTACK_SCRIPT], capture_output=True,
+        text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ALIE_FUSED_SHARDED_EQUIVALENT" in out.stdout
+    assert "IPM_FUSED_SHARDED_EQUIVALENT" in out.stdout
+
+
 def test_client_sharded_fused_trajectory_parity():
     """Fused-scan run under a 4-way client mesh (hierarchical two-stage AFA
     + per-shard compaction) agrees numerically with the single-device
