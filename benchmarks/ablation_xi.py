@@ -13,7 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.data import dirichlet_shards, make_mnist_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig, run
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -26,9 +26,10 @@ def run(quick: bool = False) -> list[dict]:
         sim = SimConfig(num_clients=10, scenario="byzantine", rounds=rounds,
                         local_epochs=2, batch_size=200, hidden=(512, 256),
                         dropout=False, seed=0)
-        res = run_simulation(
-            data, sim,
+        res = run(
+            None, sim,
             ServerConfig(rule="afa", num_clients=10, xi0=xi0),
+            data=data,
         )
         benign_blocked = sum(
             1 for k in range(10)
@@ -51,7 +52,7 @@ def run(quick: bool = False) -> list[dict]:
                         local_epochs=2, batch_size=200, hidden=(512, 256),
                         dropout=False, seed=0,
                         sharding="dirichlet", dirichlet_alpha=alpha)
-        res = run_simulation(data, sim, ServerConfig(rule="afa", num_clients=10))
+        res = run(None, sim, ServerConfig(rule="afa", num_clients=10), data=data)
         shards = dirichlet_shards(data.x_train, data.y_train, 10, alpha=alpha, seed=0)
         sizes = np.asarray([len(x) for x, _ in shards], np.float32)
         rows.append({

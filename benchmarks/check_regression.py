@@ -60,8 +60,13 @@ PREFIX_TOLERANCE_OPTS = {
 # scenario-name prefix -> absolute speedup floor, applied IN ADDITION to the
 # baseline-relative tolerance.  The packed dispatch must never lose to the
 # leaf layout it replaced: even with its conservative baseline rounded down
-# to ~1.0x, dropping below parity fails the gate outright.
-PREFIX_ABS_FLOOR = {"packed_agg/": 1.0}
+# to ~1.0x, dropping below parity fails the gate outright.  The serve tier's
+# ingress gate is a FRACTION, not a ratio: >= 95% of byzantine submissions
+# arriving after their client was blocked must die at the front door
+# (BENCH_serve.json, serve-smoke job) — admission control regressing to
+# "accept and re-screen" is a correctness loss, so no runner-noise tolerance
+# applies below the floor.
+PREFIX_ABS_FLOOR = {"packed_agg/": 1.0, "serve_ingress/": 0.95}
 
 
 def tolerance_for(name: str, args: argparse.Namespace) -> float:
@@ -94,6 +99,11 @@ def collect_speedups(doc: dict) -> dict[str, float]:
         out[f"fed_llm_agg/K{r['K']}"] = float(r["agg_speedup"])
     for r in doc.get("client_scaling", []):
         out[f"client_scaling/K{r['K']}"] = float(r["post_block_speedup"])
+    for r in doc.get("serve", []):
+        out[f"serve_ingress/K{r['K']}"] = float(r["byz_reject_fraction"])
+        out[f"serve_reject_speedup/K{r['K']}"] = float(
+            r["ingress_reject_speedup"]
+        )
     return out
 
 

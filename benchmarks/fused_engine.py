@@ -71,7 +71,9 @@ import os
 import numpy as np
 
 from repro.data import make_mnist_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig
+from repro.fed import run as fed_run
+from repro.kernels.policy import KernelPlan
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_fused_engine.json")
 
@@ -100,10 +102,10 @@ def _measure(data, K: int, engine: str, rounds: int) -> float:
         batch_size=BATCH, hidden=HIDDEN, dropout=False, seed=0, engine=engine,
     )
     cfg = ServerConfig(rule="afa", num_clients=K)
-    run_simulation(data, SimConfig(**base), cfg)  # warmup/compile
+    fed_run(None, SimConfig(**base), cfg, data=data)  # warmup/compile
     best = float("inf")
     for _ in range(REPEATS):
-        res = run_simulation(data, SimConfig(**base), cfg)
+        res = fed_run(None, SimConfig(**base), cfg, data=data)
         ts = sorted(res.round_times)
         best = min(best, ts[len(ts) // 2])
     return best
@@ -160,8 +162,8 @@ def run_compaction(tiny: bool = False) -> tuple[list[dict], list[dict]]:
         )
 
         # correctness first (also the compile warmup): pure layout change
-        base = run_simulation(data, base_sim, cfg)
-        seg = run_simulation(data, seg_sim, cfg)
+        base = fed_run(None, base_sim, cfg, data=data)
+        seg = fed_run(None, seg_sim, cfg, data=data)
         _assert_bit_exact(base, seg, K)
         n_blocked = int((seg.blocked_round > 0).sum())
 
@@ -174,8 +176,8 @@ def run_compaction(tiny: bool = False) -> tuple[list[dict], list[dict]]:
         t_base = t_seg = float("inf")
         n_segs = rounds // COMPACT_SEGMENT
         for _ in range(REPEATS):
-            b = run_simulation(data, dataclasses.replace(base_sim), cfg)
-            s = run_simulation(data, dataclasses.replace(seg_sim), cfg)
+            b = fed_run(None, dataclasses.replace(base_sim), cfg, data=data)
+            s = fed_run(None, dataclasses.replace(seg_sim), cfg, data=data)
             ts_b = sorted(b.round_times)
             t_base = min(t_base, ts_b[len(ts_b) // 2])
             steady = [
@@ -264,10 +266,12 @@ def run_packed(tiny: bool = False) -> tuple[list[dict], list[dict]]:
         rounds=rounds, local_epochs=1, batch_size=BATCH, hidden=HIDDEN,
         dropout=False, seed=0, engine="fused",
     )
-    res_p = run_simulation(data, sim, ServerConfig(
-        rule="afa", num_clients=K_sim, agg_layout="packed"))
-    res_t = run_simulation(data, dataclasses.replace(sim), ServerConfig(
-        rule="afa", num_clients=K_sim, agg_layout="tree"))
+    res_p = fed_run(None, sim, ServerConfig(
+        rule="afa", num_clients=K_sim,
+        kernel_plan=KernelPlan(layout="packed")), data=data)
+    res_t = fed_run(None, dataclasses.replace(sim), ServerConfig(
+        rule="afa", num_clients=K_sim,
+        kernel_plan=KernelPlan(layout="tree")), data=data)
     _assert_bit_exact(res_p, res_t, K_sim)
 
     rows = [
@@ -335,8 +339,8 @@ def _client_scaling_core(tiny: bool) -> tuple[list[dict], list[dict]]:
 
         # correctness first (also the compile warmup): the sharded segmented
         # trajectory must match the single-device one-shot scan
-        base = run_simulation(data, base_sim, cfg)
-        shard = run_simulation(data, shard_sim, cfg)
+        base = fed_run(None, base_sim, cfg, data=data)
+        shard = fed_run(None, shard_sim, cfg, data=data)
         np.testing.assert_allclose(
             np.asarray(base.test_error), np.asarray(shard.test_error),
             rtol=1e-4, atol=1e-4,
@@ -359,8 +363,8 @@ def _client_scaling_core(tiny: bool) -> tuple[list[dict], list[dict]]:
         t_base = t_shard = float("inf")
         n_segs = CS_ROUNDS // CS_SEGMENT
         for _ in range(CS_REPEATS):
-            b = run_simulation(data, dataclasses.replace(base_sim), cfg)
-            s = run_simulation(data, dataclasses.replace(shard_sim), cfg)
+            b = fed_run(None, dataclasses.replace(base_sim), cfg, data=data)
+            s = fed_run(None, dataclasses.replace(shard_sim), cfg, data=data)
             ts_b = sorted(b.round_times)
             t_base = min(t_base, ts_b[len(ts_b) // 2])
             steady = [
@@ -473,7 +477,7 @@ def run_fed_llm(tiny: bool = False) -> tuple[list[dict], list[dict]]:
 
     from benchmarks.common import timeit
     from repro.core import RuleOptions, dispatch_rule
-    from repro.fed.workload import make_llm_fused_data, run_llm_simulation
+    from repro.fed.workload import make_llm_fused_data
     from repro.utils.trees import pack_spec, pack_stack, tree_broadcast_clients
 
     K, byz = LLM_CLIENTS, LLM_BYZANTINE
@@ -484,14 +488,14 @@ def run_fed_llm(tiny: bool = False) -> tuple[list[dict], list[dict]]:
         workload.model_cfg, clients=K, samples_per_client=samples, seq=seq,
         n_test=8,
     )
-    kw = dict(
-        clients=K, byzantine=byz, rounds=rounds, local_steps=2, batch=2,
-        seq=seq, scenario="byzantine", data=data,
+    sim = SimConfig(
+        num_clients=K, bad_frac=byz / K, scenario="byzantine", rounds=rounds,
+        local_epochs=2, batch_size=2, seed=0, lr=0.2,
     )
 
     # correctness first (also the compile warmup): AFA must block both
     # attackers on the adapter buffer
-    res = run_llm_simulation(workload, **kw)
+    res = fed_run(workload, sim, data=data, seq=seq)
     blocked = res["blocked"][-1]
     assert blocked[:byz].all(), f"byzantine clients not blocked: {blocked}"
     assert not blocked[byz:].any(), f"benign client blocked: {blocked}"
@@ -499,7 +503,7 @@ def run_fed_llm(tiny: bool = False) -> tuple[list[dict], list[dict]]:
     t_sim = float("inf")
     for _ in range(REPEATS):
         t0 = time.perf_counter()
-        run_llm_simulation(workload, **kw)
+        fed_run(workload, sim, data=data, seq=seq)
         t_sim = min(t_sim, time.perf_counter() - t0)
     rounds_per_s = rounds / max(t_sim, 1e-9)
 

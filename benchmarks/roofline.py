@@ -6,7 +6,7 @@ the three roofline terms per (arch x shape x mesh) against TPU v5e constants.
   collective = collective_bytes/ (chips x 2 links x 50e9 B/s)
 
 HLO_FLOPs = trip-scaled dot FLOPs from the HLO parser (XLA's cost_analysis
-counts scan bodies once — see repro.launch.hlo_analysis); the analytic model
+counts scan bodies once — see repro.analysis.hlo); the analytic model
 6·N·D cross-check and utilization ratio are reported alongside.  All dry-run
 byte counts are global; divided by chip count here.
 

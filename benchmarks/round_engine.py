@@ -16,7 +16,7 @@ import json
 import os
 
 from repro.data import make_mnist_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig, run
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_engine.json")
 
@@ -35,8 +35,8 @@ def _measure(data, K: int, engine: str, rounds: int) -> float:
         batch_size=100, hidden=HIDDEN, dropout=False, seed=0, engine=engine,
     )
     cfg = ServerConfig(rule="afa", num_clients=K)
-    run_simulation(data, SimConfig(**base, rounds=1), cfg)  # warmup/compile
-    res = run_simulation(data, SimConfig(**base, rounds=rounds), cfg)
+    run(None, SimConfig(**base, rounds=1), cfg, data=data)  # warmup/compile
+    res = run(None, SimConfig(**base, rounds=rounds), cfg, data=data)
     ts = sorted(res.round_times)
     return ts[len(ts) // 2]
 

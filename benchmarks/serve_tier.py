@@ -1,0 +1,152 @@
+"""Serve-tier benchmark: sustained ingress throughput, round latency, and
+the ingress-blocking win (DESIGN.md §Serving tier) -> BENCH_serve.json.
+
+Drives the async :class:`repro.serve.AggregationService` with the
+deterministic traffic generator (Poisson-ish arrivals, stragglers, bursts,
+blocked clients reconnecting) and measures, WALL-clock from the outside
+(the service itself is logical-time only):
+
+* ``updates_per_sec``   — accepted submissions per second of server-side
+  work (time spent inside ``submit``/``poll``, which includes every round
+  aggregation those calls fired);
+* ``p99_submit_wall_us`` — p99 wall time of a single ``submit`` call (the
+  tail IS the buffer-filling submission that fires a round);
+* ``p99_round_latency`` — p99 of the rounds' logical open->fire latency;
+* ``byz_reject_fraction`` — fraction of byzantine submissions AFTER their
+  client was blocked that ingress rejected (gated >= 0.95 in CI: blocking
+  must actually keep paying after detection);
+* ``ingress_reject_speedup`` — mean wall cost of an accepted submission
+  (its amortized share of aggregation included) over the mean wall cost of
+  a blocked-rejected one: how much cheaper the front door is than the work
+  it saves.  Gated against the committed baseline like every other ratio.
+
+Usage:  PYTHONPATH=src python benchmarks/serve_tier.py [--tiny] [--json out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data import make_mnist_like
+from repro.fed import ServerConfig, SimConfig
+from repro.fed.simulator import fused_inputs
+from repro.serve import (
+    ACCEPTED,
+    REJECTED_BLOCKED,
+    AggregationService,
+    ProposalPool,
+    ServeConfig,
+    TrafficConfig,
+    run_traffic,
+)
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+K = 8  # matches the BENCH_baseline.json serve entry (the gate needs overlap)
+SERVE = ServeConfig(buffer_size=6, deadline=4.0, max_staleness=2,
+                    staleness_decay=0.7)
+TRAFFIC = TrafficConfig(seed=3, straggler_frac=0.25, burst_every=5.0)
+
+
+def _timed_service(inputs, server_cfg):
+    """An AggregationService whose submit/poll calls are wall-timed per
+    ingress decision (the service itself never reads a clock)."""
+    svc = AggregationService(
+        inputs.workload, server_cfg, SERVE, inputs.params0, inputs.data
+    )
+    times: dict[str, list[float]] = {}
+    orig_submit, orig_poll = svc.submit, svc.poll
+    poll_total = [0.0]
+
+    def submit(client_id, payload, version, now):
+        t0 = time.perf_counter()
+        out = orig_submit(client_id, payload, version, now)
+        times.setdefault(out.decision, []).append(time.perf_counter() - t0)
+        return out
+
+    def poll(now):
+        t0 = time.perf_counter()
+        out = orig_poll(now)
+        poll_total[0] += time.perf_counter() - t0
+        return out
+
+    svc.submit, svc.poll = submit, poll
+    return svc, times, poll_total
+
+
+def run_serve_bench(tiny: bool = False) -> dict:
+    rounds = 20 if tiny else 60
+    data = make_mnist_like(n_train=600, n_test=150, dim=20)
+    sim = SimConfig(
+        num_clients=K, bad_frac=0.25, scenario="byzantine", rounds=rounds,
+        local_epochs=2, batch_size=50, hidden=(16,), dropout=False, seed=0,
+        engine="fused",
+    )
+    server_cfg = ServerConfig(rule="afa", num_clients=K)
+    inputs = fused_inputs(data, sim)
+
+    # warmup run: compiles the proposal pipeline + the aggregation step (the
+    # jits are lru-cached on (workload, cfg) so the timed run reuses them)
+    svc, _, _ = _timed_service(inputs, server_cfg)
+    run_traffic(svc, ProposalPool(inputs, sim.seed), TRAFFIC,
+                target_rounds=min(rounds, 10))
+
+    svc, times, poll_total = _timed_service(inputs, server_cfg)
+    pool = ProposalPool(inputs, sim.seed)
+    rep = run_traffic(svc, pool, TRAFFIC, target_rounds=rounds)
+
+    accepted = times.get(ACCEPTED, [])
+    rejected = times.get(REJECTED_BLOCKED, [])
+    server_s = sum(sum(v) for v in times.values()) + poll_total[0]
+    submit_all = sorted(t for v in times.values() for t in v)
+    latencies = sorted(r.latency for r in rep.rounds)
+
+    def p99(xs):
+        return xs[min(int(len(xs) * 0.99), len(xs) - 1)] if xs else float("nan")
+
+    entry = {
+        "K": K,
+        "rounds": len(rep.rounds),
+        "events": rep.n_events,
+        "decisions": rep.decisions,
+        "updates_per_sec": round(len(accepted) / max(server_s, 1e-9), 1),
+        "p99_submit_wall_us": round(p99(submit_all) * 1e6, 1),
+        "p99_round_latency": round(p99(latencies), 3),  # logical units
+        "byz_reject_fraction": round(rep.byz_reject_fraction, 4),
+        "ingress_reject_speedup": round(
+            float(np.mean(accepted) / np.mean(rejected)), 2
+        ) if accepted and rejected else float("nan"),
+    }
+    assert rep.byz_submissions_after_block > 0, "traffic never re-hit ingress"
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced rounds for CI (< 1 min on CPU)")
+    ap.add_argument("--json", default=OUT_JSON)
+    args = ap.parse_args(argv)
+
+    entry = run_serve_bench(tiny=args.tiny)
+    doc = {
+        "note": "Serve-tier throughput/latency/ingress metrics "
+                "(benchmarks/serve_tier.py). byz_reject_fraction and "
+                "ingress_reject_speedup are gated by check_regression.py; "
+                "the absolute times are informational.",
+        "serve": [entry],
+    }
+    with open(args.json, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(json.dumps(doc["serve"], indent=2))
+    print(f"wrote {os.path.abspath(args.json)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.data import make_mnist_like, make_spambase_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig, run
 
 SCENARIOS = ["clean", "byzantine", "flipping", "noisy"]
 RULES = ["afa", "fa", "mkrum", "comed"]
@@ -29,7 +29,7 @@ def run(quick: bool = False) -> list[dict]:
                     dropout=False, seed=0,
                     lr=0.1 if dname == "mnist_like" else 0.05,
                 )
-                res = run_simulation(data, sim, ServerConfig(rule=rule, num_clients=10))
+                res = run(None, sim, ServerConfig(rule=rule, num_clients=10), data=data)
                 err = float(np.mean(res.test_error[-3:]))
                 rows.append({
                     "name": f"table1/{dname}/{scenario}/{rule}",

@@ -25,7 +25,7 @@ import numpy as np
 
 
 def run_lora(smoke: bool) -> int:
-    from repro.fed.workload import get_workload, run_llm_simulation
+    from repro.fed import SimConfig, get_workload, run
 
     rounds = 8
     seq = 32 if smoke else 128
@@ -36,11 +36,13 @@ def run_lora(smoke: bool) -> int:
         f"rank {workload.rank}",
         flush=True,
     )
-    res = run_llm_simulation(
-        workload, clients=6, byzantine=2, rounds=rounds, local_steps=2,
-        batch=2, samples_per_client=samples, seq=seq, seed=0,
-        scenario="byzantine",
+    # same front door as the classification quickstart: a non-DNN workload
+    # routes to the fused LLM driver, SimConfig carries the cohort geometry
+    sim = SimConfig(
+        num_clients=6, bad_frac=2 / 6, scenario="byzantine", rounds=rounds,
+        local_epochs=2, batch_size=2, seed=0, lr=0.2,
     )
+    res = run(workload, sim, samples_per_client=samples, seq=seq)
     print(
         f"adapter proposals: {res['adapter_dim']} of {res['param_dim']} params "
         f"({100 * res['adapter_fraction']:.2f}%)",

@@ -10,7 +10,7 @@ Trains the paper's DNN on a synthetic MNIST-like dataset with 10 clients,
 import numpy as np
 
 from repro.data import make_mnist_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig, run
 
 data = make_mnist_like(n_train=4000, n_test=1000)
 
@@ -34,7 +34,10 @@ server = ServerConfig(
     delta_block=0.95,        # eq. (6) blocking threshold
 )
 
-res = run_simulation(data, sim, server)
+# the one front door: repro.fed.run routes to the classification simulator
+# (workload=None -> the paper DNN); pass seeds=... for a sweep, or a
+# ClientWorkload for LLM fine-tuning — same call
+res = run(None, sim, server, data=data)
 
 print("per-round test error (%):", [f"{e:.2f}" for e in res.test_error])
 print("bad clients:", res.bad_clients.tolist())

@@ -10,7 +10,7 @@ clean / byzantine / label-flipping / noisy clients) plus two extra rules
 import numpy as np
 
 from repro.data import make_mnist_like
-from repro.fed import ServerConfig, SimConfig, run_simulation
+from repro.fed import ServerConfig, SimConfig, run
 
 RULES = ["afa", "fa", "mkrum", "comed", "trimmed_mean", "norm_clip"]
 SCENARIOS = ["clean", "byzantine", "flipping", "noisy", "alie"]
@@ -25,7 +25,7 @@ for scenario in SCENARIOS:
             num_clients=10, scenario=scenario, rounds=10, local_epochs=2,
             batch_size=200, hidden=(512, 256), dropout=False, seed=0,
         )
-        res = run_simulation(data, sim, ServerConfig(rule=rule, num_clients=10))
+        res = run(None, sim, ServerConfig(rule=rule, num_clients=10), data=data)
         err = float(np.mean(res.test_error[-3:]))
         det = (
             f"({res.detection_rate:.0%} blk)" if rule == "afa" and scenario != "clean"

@@ -1,8 +1,8 @@
 """Post-compile HLO analysis for the roofline report and lint budgets.
 
-(Absorbed from ``repro.launch.hlo_analysis``, which remains as a re-export
-shim; the trip-scaled multipliers here also back the HLO-level side of the
-collective-budget lint.)
+(Absorbed from the old ``repro.launch.hlo_analysis``, whose re-export shim
+has since been removed; the trip-scaled multipliers here also back the
+HLO-level side of the collective-budget lint.)
 
 XLA's ``cost_analysis()`` counts a while/scan body ONCE (verified: an 8-layer
 scanned stack reports 1/8 the unrolled FLOPs), so raw numbers undercount

@@ -64,6 +64,38 @@ def update_reputation(
     return ReputationState(alpha=alpha, beta=beta, blocked=blocked)
 
 
+def update_reputation_weighted(
+    state: ReputationState,
+    good_mask: jnp.ndarray,
+    participated: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    delta: float = 0.95,
+) -> ReputationState:
+    """:func:`update_reputation` with per-client evidence weights in [0, 1].
+
+    The serving tier's staleness decay (DESIGN.md §Serving tier): an update
+    trained against params from round ``t - tau`` is weaker evidence about
+    the client's current behaviour, so its Bernoulli observation enters the
+    Beta posterior fractionally — ``alpha += w * good``, ``beta += w * bad``
+    with ``w = gamma**tau``.  A pseudo-count update with fractional counts is
+    still a conjugate Beta update (the power-likelihood / tempered posterior),
+    so blocking via ``I_{0.5}(alpha, beta) > delta`` needs no change.
+
+    ``weights = 1`` reproduces :func:`update_reputation` exactly (the ``* 1.0``
+    multiply is a bitwise no-op on f32 counts), which is what keeps the
+    synchronous engines' trajectories bit-identical when decay is disabled.
+    """
+    participated = participated & ~state.blocked
+    good = participated & good_mask
+    bad = participated & ~good_mask
+    w = jnp.asarray(weights, jnp.float32)
+    alpha = state.alpha + good.astype(jnp.float32) * w
+    beta = state.beta + bad.astype(jnp.float32) * w
+    blocked = state.blocked | (betainc(alpha, beta, 0.5) > delta)
+    return ReputationState(alpha=alpha, beta=beta, blocked=blocked)
+
+
 def mark_blocked_round(
     rounds_blocked: jnp.ndarray,
     blocked_before: jnp.ndarray,

@@ -218,6 +218,78 @@ class FusedTrajectory(NamedTuple):
     blocked: jnp.ndarray     # (T, K) bool — blocked set AFTER each round
 
 
+def _propose_round(
+    workload, cfg: EngineConfig, num_clients_total, batch_s, batch_b,
+    client_axis, params, blocked, rnd, seed, data: FusedData, bad, client_ids,
+):
+    """One round's PROPOSAL phase, factored out of :func:`_round_body` so the
+    serving tier (``repro.serve``) traces the IDENTICAL op sequence when it
+    computes client submissions outside the fused scan: participation masks,
+    the device minibatch draw, vmapped local training, and the update-level
+    attack — everything up to (but not including) aggregation.  Returns
+    ``(proposals, mask0)`` with ``proposals`` a stacked proposal-space pytree
+    and ``mask0`` the live-participant mask."""
+    skip_bad = cfg.scenario in UPDATE_ATTACK_SCENARIOS
+    mask0 = ~blocked
+    train_mask = mask0 & ~bad if skip_bad else mask0
+
+    base = jax.random.PRNGKey(seed)
+    ids = jnp.asarray(client_ids, jnp.uint32)
+    offsets = jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(num_clients_total) + ids
+
+    # device-side minibatch draw: one key per (round, client), per-client
+    # maxval — pad rows carry length 1 so the draw range is never empty
+    bbase = jax.random.fold_in(base, _BATCH_STREAM)
+    bkeys = jax.vmap(lambda o: jax.random.fold_in(bbase, o))(offsets)
+    idx = jax.vmap(
+        lambda k, n: jax.random.randint(k, (batch_s, batch_b), 0, n)
+    )(bkeys, data.lengths)
+    batch = {
+        "x": jax.vmap(lambda xs, ix: xs[ix])(data.x, idx),
+        "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
+    }
+    proposals = _train_and_attack(
+        workload, cfg, params, batch,
+        client_keys_traced(seed, rnd, ids, num_clients_total),
+        train_mask, bad & mask0, mask0 & ~bad,
+        jax.random.fold_in(base, rnd),
+        client_ids=ids,
+        client_axis=client_axis,
+    )
+    return proposals, mask0
+
+
+@functools.lru_cache(maxsize=32)
+def make_packed_propose_fn(
+    workload, cfg: EngineConfig, num_clients_total, batch_s, batch_b,
+):
+    """The serving tier's client-cohort computation: a jit'd
+
+        ``propose(params, blocked, rnd, seed, data, bad, client_ids)
+          -> (K, D) packed proposal buffer``
+
+    tracing the EXACT proposal pipeline of the fused round body
+    (:func:`_propose_round`) and packing the stacked result with the
+    workload's delta spec — so a row of this buffer is bit-identical to the
+    row the synchronous engine would have aggregated, which is what lets the
+    serve tier's buffer=K replay reproduce the fused trajectory exactly.
+    Blocked rows hold the packed current proposal point ``w_t`` (they train
+    nothing and no attack touches them), matching the fused body's masked
+    rows."""
+
+    @jax.jit
+    def propose(params, blocked, rnd, seed, data: FusedData, bad, client_ids):
+        proposals, _ = _propose_round(
+            workload, cfg, num_clients_total, batch_s, batch_b, None,
+            params, blocked, rnd, seed, data, bad, client_ids,
+        )
+        from repro.utils.trees import pack_stack
+
+        return pack_stack(proposals, workload.delta_spec(params))
+
+    return propose
+
+
 def _round_body(
     workload, cfg: EngineConfig, rule, opts, delta_block, agg_layout,
     num_clients_total, batch_s, batch_b, client_axis,
@@ -248,32 +320,9 @@ def _round_body(
     from repro.fed.server import server_step
 
     params, state = carry
-    skip_bad = cfg.scenario in UPDATE_ATTACK_SCENARIOS
-    mask0 = ~state.reputation.blocked
-    train_mask = mask0 & ~bad if skip_bad else mask0
-
-    base = jax.random.PRNGKey(seed)
-    ids = jnp.asarray(client_ids, jnp.uint32)
-    offsets = jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(num_clients_total) + ids
-
-    # device-side minibatch draw: one key per (round, client), per-client
-    # maxval — pad rows carry length 1 so the draw range is never empty
-    bbase = jax.random.fold_in(base, _BATCH_STREAM)
-    bkeys = jax.vmap(lambda o: jax.random.fold_in(bbase, o))(offsets)
-    idx = jax.vmap(
-        lambda k, n: jax.random.randint(k, (batch_s, batch_b), 0, n)
-    )(bkeys, data.lengths)
-    batch = {
-        "x": jax.vmap(lambda xs, ix: xs[ix])(data.x, idx),
-        "y": jax.vmap(lambda ys, ix: ys[ix])(data.y, idx),
-    }
-    proposals = _train_and_attack(
-        workload, cfg, params, batch,
-        client_keys_traced(seed, rnd, ids, num_clients_total),
-        train_mask, bad & mask0, mask0 & ~bad,
-        jax.random.fold_in(base, rnd),
-        client_ids=ids,
-        client_axis=client_axis,
+    proposals, mask0 = _propose_round(
+        workload, cfg, num_clients_total, batch_s, batch_b, client_axis,
+        params, state.reputation.blocked, rnd, seed, data, bad, client_ids,
     )
 
     if agg_layout == "packed":

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -51,7 +52,9 @@ from repro.core import (
     p_good,
     scatter_reputation,
     update_reputation,
+    update_reputation_weighted,
 )
+from repro.kernels.policy import KernelPlan, resolve_kernel_plan
 
 
 @dataclasses.dataclass
@@ -70,8 +73,16 @@ class ServerConfig:
     # baselines
     num_byzantine: int = 3       # f for mkrum/bulyan
     trim: int = 3                # for trimmed_mean
-    # Route every rule's hot ops (the fused AFA screen, gram / cosine-sim /
-    # weighted-sum, coord-median, trimmed-mean) through the Pallas kernels.
+    # THE kernel/layout decision: one frozen, host-resolved plan
+    # (repro.kernels.policy.KernelPlan) covering the kernel route, the AFA
+    # screening launch geometry, and the aggregation layout.  None = resolve
+    # from the legacy knobs below (and $REPRO_KERNELS) via
+    # ``resolve_server_plan``; setting BOTH a plan and a conflicting
+    # non-default legacy knob raises.
+    kernel_plan: KernelPlan | None = None
+    # DEPRECATED — prefer ``kernel_plan``.  Route every rule's hot ops (the
+    # fused AFA screen, gram / cosine-sim / weighted-sum, coord-median,
+    # trimmed-mean) through the Pallas kernels.
     # A bool selects automatically via $REPRO_KERNELS (auto -> pallas on TPU,
     # the jnp reference elsewhere — interpret-mode Pallas is far slower than
     # XLA, and the Triton route only fits block-resident operands, so
@@ -83,12 +94,59 @@ class ServerConfig:
     # every kernel route works in-jit with traced masks; only geomed /
     # centered-clip stay kernel-less (see DESIGN.md §3).
     use_kernels: bool | str = False
-    # Aggregation layout of the tree dispatch (DESIGN.md §3): "packed" packs
-    # the stacked proposal pytree into one contiguous (K, D) buffer and runs
-    # every rule's matrix form on it; "leaf" keeps the legacy per-leaf path
-    # (AFA's native tree form, per-leaf flatten for the rest) — the reference
-    # the packed path is benchmarked against.
+    # DEPRECATED — prefer ``kernel_plan``.  Aggregation layout of the tree
+    # dispatch (DESIGN.md §3): "packed" packs the stacked proposal pytree
+    # into one contiguous (K, D) buffer and runs every rule's matrix form on
+    # it; "leaf" keeps the legacy per-leaf path (AFA's native tree form,
+    # per-leaf flatten for the rest) — the reference the packed path is
+    # benchmarked against.
     agg_layout: str = "packed"
+
+
+_LEGACY_KNOB_DEFAULTS = {"use_kernels": False, "agg_layout": "packed"}
+
+
+def resolve_server_plan(cfg: ServerConfig) -> KernelPlan:
+    """The config's :class:`~repro.kernels.policy.KernelPlan`, resolved once.
+
+    Precedence: an explicit ``cfg.kernel_plan`` wins; the legacy knobs
+    (``use_kernels`` / ``agg_layout``) may then only agree with it or keep
+    their defaults — a non-default legacy knob that CONTRADICTS the plan
+    raises, because two explicit requests disagree.  Without a plan, the
+    legacy knobs resolve through :func:`~repro.kernels.policy
+    .resolve_kernel_plan` (which itself raises on a config-pinned mode
+    fighting an env-pinned one) and a DeprecationWarning points at the plan.
+    """
+    if cfg.kernel_plan is not None:
+        plan = cfg.kernel_plan
+        conflicts = {
+            name: getattr(cfg, name)
+            for name, default in _LEGACY_KNOB_DEFAULTS.items()
+            if getattr(cfg, name) != default
+            and getattr(cfg, name) != getattr(plan, _PLAN_FIELD[name])
+        }
+        if conflicts:
+            raise ValueError(
+                f"ServerConfig.kernel_plan={plan} conflicts with legacy "
+                f"knobs {conflicts}; set the plan OR the legacy knobs, not "
+                "disagreeing values of both"
+            )
+        return plan
+    if any(
+        getattr(cfg, name) != default
+        for name, default in _LEGACY_KNOB_DEFAULTS.items()
+    ):
+        warnings.warn(
+            "ServerConfig.use_kernels / ServerConfig.agg_layout are "
+            "deprecated; pass ServerConfig(kernel_plan=resolve_kernel_plan("
+            "use_kernels, agg_layout)) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return resolve_kernel_plan(cfg.use_kernels, cfg.agg_layout)
+
+
+_PLAN_FIELD = {"use_kernels": "mode", "agg_layout": "layout"}
 
 
 # ---------------------------------------------------------------------------
@@ -179,19 +237,18 @@ def make_rule_options(cfg: ServerConfig, num_participants: int, *,
     blocked.  (Only AFA blocks, so under MKRUM the participant count is
     constant and the fused engine can compute it once before tracing.)
 
-    ``use_kernels`` is resolved HERE, on the host: RuleOptions is a static
-    jit argument, so resolving early makes the request key the jit cache
-    instead of being frozen from whatever $REPRO_KERNELS said at first
-    trace.  Only the *env-pinned* part is resolved (an explicit mode string
-    replaces the bool); an auto request stays a bool — the backend it
+    The kernel route, launch geometry, and layout all come from the config's
+    resolved :class:`~repro.kernels.policy.KernelPlan`
+    (:func:`resolve_server_plan`) — resolved HERE, on the host: RuleOptions
+    is a static jit argument, so resolving early makes the request key the
+    jit cache instead of being frozen from whatever $REPRO_KERNELS said at
+    first trace.  Only the *env-pinned* part is resolved (an explicit mode
+    string replaces the bool); an auto request stays a bool — the backend it
     resolves by is fixed per process, and collapsing auto-True into a
     concrete mode string would make rules without a kernel (trimmed-mean)
     mistake auto selection on TPU for an explicit pallas demand and raise.
     """
-    from repro.kernels.policy import explicit_kernel_request
-
-    explicit = explicit_kernel_request(cfg.use_kernels)
-    mode = explicit if explicit is not None else bool(cfg.use_kernels)
+    plan = resolve_server_plan(cfg)
     return RuleOptions(
         num_byzantine=cfg.num_byzantine,
         trim=cfg.trim,
@@ -199,11 +256,11 @@ def make_rule_options(cfg: ServerConfig, num_participants: int, *,
             max(num_participants - cfg.num_byzantine - 2, 1)
             if cfg.rule == "mkrum" else None
         ),
-        use_kernels=mode,
+        use_kernels=plan.mode,
         afa=AFAConfig(
             xi0=cfg.xi0, delta_xi=cfg.delta_xi, variant=cfg.afa_variant,
-            use_kernels=mode, client_axis=client_axis,
-            client_shards=client_shards,
+            use_kernels=plan.mode, kernel_launch=plan.launch,
+            client_axis=client_axis, client_shards=client_shards,
         ),
     )
 
@@ -263,6 +320,90 @@ def server_step(
         )
     if RULES[rule].updates_reputation:
         state = _absorb(state, res.good_mask, jnp.asarray(mask0), delta=delta_block)
+    else:
+        state = state._replace(round=state.round + 1)
+    return state, res
+
+
+@functools.partial(jax.jit, static_argnames=("delta",))
+def _absorb_weighted(
+    state: ServerState, good_mask, mask0, weights, *, delta: float
+) -> ServerState:
+    """:func:`_absorb` with per-client evidence weights — the staleness-decay
+    route of the serving tier (weights = decay**tau)."""
+    rep = update_reputation_weighted(
+        state.reputation, good_mask, mask0, weights, delta=delta
+    )
+    rounds_blocked = mark_blocked_round(
+        state.rounds_blocked, state.reputation.blocked, rep.blocked, state.round
+    )
+    return ServerState(rep, rounds_blocked, state.round + 1)
+
+
+def server_step_versioned(
+    state: ServerState,
+    proposals,
+    n_k: jnp.ndarray,
+    mask0: jnp.ndarray,
+    versions: jnp.ndarray,
+    *,
+    rule: str,
+    opts: RuleOptions,
+    delta_block: float = 0.95,
+    layout: str = "packed",
+    staleness_decay: float = 1.0,
+):
+    """:func:`server_step` for ASYNC buffers: per-update version stamps.
+
+    ``versions`` is ``(K,)`` int32 — the round counter of the params each
+    buffered update was trained against; its staleness is ``tau =
+    state.round - version`` (clipped at 0).  The rule dispatch itself is
+    UNCHANGED — screening judges the update that was actually submitted —
+    but a stale update is weaker evidence about the client's current
+    behaviour, so the reputation absorb down-weights its Bernoulli
+    observation by ``staleness_decay ** tau`` (a tempered Beta update,
+    ``core/reputation.update_reputation_weighted``).
+
+    ``staleness_decay = 1.0`` (the default, a host-static float) routes
+    through the exact synchronous :func:`_absorb`, so the serve tier's
+    buffer=K / deadline=inf / decay-off configuration reproduces the fused
+    engine's state evolution bit for bit — the acceptance contract of the
+    streaming tier.  Entries of ``versions`` for non-participating rows are
+    inert (their good/bad observations are already mask-zeroed).
+    """
+    if not 0.0 < staleness_decay <= 1.0:
+        raise ValueError(
+            f"staleness_decay={staleness_decay!r} outside (0, 1]"
+        )
+    if layout in ("matrix", "packed"):
+        res = dispatch_rule(
+            rule, proposals, jnp.asarray(n_k, jnp.float32),
+            p_good(state.reputation), mask0, opts,
+        )
+    elif layout in ("tree", "leaf"):
+        res = dispatch_rule_tree(
+            rule, proposals, jnp.asarray(n_k, jnp.float32),
+            p_good(state.reputation), mask0, opts,
+            layout="packed" if layout == "tree" else "leaf",
+        )
+    else:
+        raise ValueError(
+            f"unknown layout {layout!r}; expected tree | leaf | matrix | packed"
+        )
+    if RULES[rule].updates_reputation:
+        if staleness_decay == 1.0:
+            state = _absorb(
+                state, res.good_mask, jnp.asarray(mask0), delta=delta_block
+            )
+        else:
+            tau = jnp.maximum(
+                state.round - jnp.asarray(versions, jnp.int32), 0
+            )
+            weights = jnp.float32(staleness_decay) ** tau.astype(jnp.float32)
+            state = _absorb_weighted(
+                state, res.good_mask, jnp.asarray(mask0), weights,
+                delta=delta_block,
+            )
     else:
         state = state._replace(round=state.round + 1)
     return state, res
@@ -346,7 +487,10 @@ class FedServer:
 
     def aggregate_tree(self, stacked, n_k: jnp.ndarray, selected: np.ndarray):
         """Stacked-pytree layout: every leaf carries a leading client axis.
-        Dispatches through the packed (K, D) path unless the config pins
-        ``agg_layout="leaf"``.  Returns (aggregate pytree, info dict)."""
-        layout = "leaf" if self.cfg.agg_layout == "leaf" else "tree"
+        Dispatches through the packed (K, D) path unless the config's
+        resolved plan pins ``layout="leaf"``.  Returns (aggregate pytree,
+        info dict)."""
+        layout = (
+            "leaf" if resolve_server_plan(self.cfg).layout == "leaf" else "tree"
+        )
         return self._apply(stacked, n_k, selected, layout)

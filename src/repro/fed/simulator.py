@@ -53,6 +53,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +91,7 @@ from repro.fed.server import (
     gather_server_state,
     init_server_state,
     make_rule_options,
+    resolve_server_plan,
     scatter_server_state,
 )
 from repro.fed.workload import DnnWorkload
@@ -146,7 +149,8 @@ class SimResult:
 class _Setup:
     """Shared (engine-independent) experiment state."""
 
-    def __init__(self, data: SyntheticClassification, sim: SimConfig):
+    def __init__(self, data: SyntheticClassification, sim: SimConfig,
+                 workload=None):
         self.rng = np.random.default_rng(sim.seed)
         self.sim = sim
         K = sim.num_clients
@@ -175,9 +179,12 @@ class _Setup:
 
         out_units = 1 if binary else data.num_classes
         self.sizes = (data.dim, *sim.hidden, out_units)
-        # the classification simulator drives the paper-DNN workload; all
-        # engines below consume it only through the ClientWorkload protocol
-        self.workload = DnnWorkload(self.sizes)
+        # the classification simulator drives the paper-DNN workload by
+        # default (the facade may inject a compatible override); all engines
+        # below consume it only through the ClientWorkload protocol
+        self.workload = (
+            workload if workload is not None else DnnWorkload(self.sizes)
+        )
         self.params0 = self.workload.init_params(jax.random.PRNGKey(sim.seed))
         self.n_k = np.asarray([len(x) for x, _ in self.poisoned], np.float32)
         self.x_test = jnp.asarray(data.x_test)
@@ -259,7 +266,31 @@ def run_simulation(
     *,
     eval_every: int = 1,
 ) -> SimResult:
-    setup = _Setup(data, sim)
+    """DEPRECATED — call :func:`repro.fed.api.run` instead.
+
+    Thin shim over :func:`simulate` (bit-identical trajectory), kept so
+    existing callers keep working with a warning.
+    """
+    warnings.warn(
+        "run_simulation is deprecated; use repro.fed.api.run(workload, sim, "
+        "server, data=data) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return simulate(data, sim, server_cfg, eval_every=eval_every)
+
+
+def simulate(
+    data: SyntheticClassification,
+    sim: SimConfig,
+    server_cfg: ServerConfig,
+    *,
+    eval_every: int = 1,
+    workload=None,
+) -> SimResult:
+    """The classification-simulator implementation behind
+    ``repro.fed.api.run`` — route ``sim.engine`` to its round engine."""
+    setup = _Setup(data, sim, workload=workload)
     if sim.client_shards > 0 and sim.engine != "fused":
         raise ValueError(
             f"client_shards requires engine='fused' (got {sim.engine!r})"
@@ -471,8 +502,40 @@ def _make_setup_sim(setup: _Setup, server_cfg: ServerConfig, mesh=None):
         bad_mask=setup.bad_mask,
         alpha0=server_cfg.alpha0,
         beta0=server_cfg.beta0,
-        agg_layout=server_cfg.agg_layout,
+        agg_layout=resolve_server_plan(server_cfg).layout,
         client_mesh=mesh,
+    )
+
+
+class FusedInputs(NamedTuple):
+    """Everything an EXTERNAL driver of the fused round pipeline needs — the
+    serving tier (``repro.serve``) builds its proposal pool and aggregation
+    service from this instead of re-deriving shard/batch geometry."""
+
+    workload: object           # ClientWorkload (hashable frozen dataclass)
+    engine_cfg: EngineConfig
+    data: FusedData            # padded device stacks + n_k + test set
+    bad_mask: np.ndarray       # (K,) bool — ground-truth byzantine ids
+    batch_s: int               # per-round local steps
+    batch_b: int               # minibatch width
+    params0: object            # workload.init_params(PRNGKey(sim.seed))
+
+
+def fused_inputs(
+    data: SyntheticClassification, sim: SimConfig, *, workload=None
+) -> FusedInputs:
+    """Build the fused-engine inputs for this experiment WITHOUT running it —
+    the exact same ``_Setup`` the engines use, so an external driver that
+    replays rounds through these inputs reproduces the fused trajectory."""
+    setup = _Setup(data, sim, workload=workload)
+    return FusedInputs(
+        workload=setup.workload,
+        engine_cfg=setup.engine_config(),
+        data=_fused_data(setup),
+        bad_mask=setup.bad_mask,
+        batch_s=setup.batch_s,
+        batch_b=setup.batch_b,
+        params0=setup.params0,
     )
 
 
@@ -572,7 +635,7 @@ def _segment_fn(setup: _Setup, server_cfg: ServerConfig, seg_len: int,
         seg_len=seg_len,
         batch_s=setup.batch_s,
         batch_b=setup.batch_b,
-        agg_layout=server_cfg.agg_layout,
+        agg_layout=resolve_server_plan(server_cfg).layout,
         client_mesh=mesh,
         bucket_rows=bucket_rows,
     )
@@ -695,6 +758,26 @@ class SweepResult:
 
 
 def run_sweep(
+    data: SyntheticClassification,
+    sim: SimConfig,
+    server_cfg: ServerConfig,
+    seeds,
+) -> SweepResult:
+    """DEPRECATED — call :func:`repro.fed.api.run` with ``seeds=`` instead.
+
+    Thin shim over :func:`sweep` (bit-identical trajectories), kept so
+    existing callers keep working with a warning.
+    """
+    warnings.warn(
+        "run_sweep is deprecated; use repro.fed.api.run(workload, sim, "
+        "server, data=data, seeds=seeds) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return sweep(data, sim, server_cfg, seeds)
+
+
+def sweep(
     data: SyntheticClassification,
     sim: SimConfig,
     server_cfg: ServerConfig,

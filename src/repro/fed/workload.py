@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -51,7 +52,7 @@ import numpy as np
 
 from repro.fed.client import local_sgd, local_sgd_frozen
 from repro.fed.dnn import dnn_error, dnn_loss, init_dnn
-from repro.utils.trees import pack_spec, tree_size
+from repro.utils.trees import PackSpec, pack_spec, tree_size
 
 
 class ProposalCodec(NamedTuple):
@@ -95,6 +96,38 @@ def _adapter_apply(params, aggregate):
 ADAPTER_CODEC = ProposalCodec(_adapter_proposal, _adapter_apply)
 
 
+def validate_submission(spec: PackSpec, payload) -> np.ndarray:
+    """Validate ONE submitted packed proposal row against a workload's
+    :class:`~repro.utils.trees.PackSpec` — the serving tier's wire contract.
+
+    A client submission is a ``(D,)`` row of the packed aggregation buffer in
+    the spec's promoted dtype.  Anything else — wrong rank, wrong width,
+    non-castable dtype, NaN/Inf entries — raises ``ValueError`` and the
+    service rejects the submission at ingress (reason ``invalid``).  The
+    finiteness check is load-bearing, not cosmetic: the engines' masked-row
+    invariance (a rejected row never influences the aggregate) relies on
+    masked rows being zeroed by multiplication, and ``0 * inf = nan`` would
+    leak a poisoned row through the mask.
+
+    Returns the row as a host array in ``spec.dtype``.
+    """
+    row = np.asarray(payload)
+    if row.shape != (spec.dim,):
+        raise ValueError(
+            f"submission shape {row.shape} != ({spec.dim},) — one packed "
+            "proposal row per submission"
+        )
+    if not np.can_cast(row.dtype, spec.dtype, casting="same_kind"):
+        raise ValueError(
+            f"submission dtype {row.dtype} does not safely cast to the "
+            f"packed buffer dtype {spec.dtype}"
+        )
+    row = row.astype(spec.dtype, copy=False)
+    if np.issubdtype(row.dtype, np.floating) and not np.all(np.isfinite(row)):
+        raise ValueError("submission contains non-finite entries")
+    return row
+
+
 class ClientWorkload:
     """Protocol base (subclasses are frozen dataclasses — see module doc).
 
@@ -130,6 +163,11 @@ class ClientWorkload:
     def proposal_dim(self, params) -> int:
         """D: flattened size of one proposal row."""
         return tree_size(self.codec.proposal_of(params))
+
+    def validate_submission(self, params, payload) -> np.ndarray:
+        """Ingress validation of one submitted packed proposal row (the
+        serving tier's wire contract) — see :func:`validate_submission`."""
+        return validate_submission(self.delta_spec(params), payload)
 
     def param_dim(self, params) -> int:
         """Total model size (frozen + trainable)."""
@@ -412,6 +450,24 @@ def make_llm_fused_data(
 
 
 def run_llm_simulation(
+    workload: TransformerLoraWorkload,
+    **kwargs,
+):
+    """DEPRECATED — call :func:`repro.fed.api.run` instead.
+
+    Thin shim over :func:`simulate_llm`, kept so existing callers keep
+    working; ``repro.fed.api.run(workload, sim)`` is the one front door.
+    """
+    warnings.warn(
+        "run_llm_simulation is deprecated; use repro.fed.api.run(workload, "
+        "sim_config) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return simulate_llm(workload, **kwargs)
+
+
+def simulate_llm(
     workload: TransformerLoraWorkload,
     *,
     clients: int = 6,

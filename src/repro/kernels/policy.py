@@ -54,6 +54,7 @@ path (see ``kernels/afa_screen.py`` and ``core/afa.py``).
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import jax
@@ -62,6 +63,12 @@ ENV_VAR = "REPRO_KERNELS"
 MODES = ("pallas", "pallas-gpu", "jnp", "interpret")
 # modes that execute compiled (non-interpreted) Pallas kernels
 COMPILED_MODES = ("pallas", "pallas-gpu")
+
+# AFA screening launch geometries (core/afa.py): "fused" = the whole
+# screening loop as ONE Pallas launch, "chained" = per-op kernel launches
+LAUNCHES = ("fused", "chained")
+# aggregation representations (fed/engine.AGG_LAYOUTS + the matrix forms)
+LAYOUTS = ("packed", "tree", "leaf")
 
 
 def requested_policy() -> str:
@@ -97,6 +104,79 @@ def resolve_kernel_mode(use_kernels: bool | str | None) -> str:
             f"kernel mode {policy!r} invalid; expected one of {('auto',) + MODES}"
         )
     return policy
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """The ONE resolved kernel/layout decision of an aggregation stack.
+
+    Historically the same choice was spread over four knobs —
+    ``ServerConfig.use_kernels``, ``ServerConfig.agg_layout``,
+    ``AFAConfig.kernel_launch``, and the ``$REPRO_KERNELS`` env var — which
+    could silently disagree.  A ``KernelPlan`` is resolved ONCE on the host
+    (:func:`resolve_kernel_plan`), is frozen and hashable (so it keys the jit
+    cache like every other static knob), and is the only thing the dispatch
+    layer reads.
+
+    ``mode`` carries the resolved ``use_kernels`` value: a mode string when
+    the route is pinned (explicitly by config, or by an env pin elevating a
+    ``True`` request), or a bool for auto selection (kept a bool on purpose —
+    see ``fed/server.make_rule_options`` — so rules without a kernel don't
+    mistake auto-TPU selection for an explicit pallas demand).
+    """
+
+    mode: bool | str = False   # resolved kernel request (bool = auto)
+    launch: str = "fused"      # AFA screening geometry: fused | chained
+    layout: str = "packed"     # aggregation representation: packed|tree|leaf
+
+    def __post_init__(self):
+        if self.launch not in LAUNCHES:
+            raise ValueError(
+                f"KernelPlan.launch={self.launch!r} invalid; expected {LAUNCHES}"
+            )
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"KernelPlan.layout={self.layout!r} invalid; expected {LAYOUTS}"
+            )
+        if not (isinstance(self.mode, bool) or self.mode in MODES):
+            raise ValueError(
+                f"KernelPlan.mode={self.mode!r} invalid; expected a bool or "
+                f"one of {MODES}"
+            )
+
+
+def resolve_kernel_plan(
+    use_kernels: bool | str | None = False,
+    agg_layout: str = "packed",
+    kernel_launch: str = "fused",
+) -> KernelPlan:
+    """Collapse the legacy knob triple (+ the env var) into one KernelPlan.
+
+    Precedence for the kernel route, highest first:
+
+    1. an explicit mode string in ``use_kernels`` ("pallas" / "pallas-gpu" /
+       "jnp" / "interpret") pins the route;
+    2. ``$REPRO_KERNELS`` pinning a concrete mode elevates ``use_kernels=True``
+       to that mode;
+    3. otherwise auto selection: ``mode`` stays the bool and the backend
+       decides at dispatch (pallas on TPU, jnp elsewhere).
+
+    Conflicting *explicit* requests raise instead of racing: a config-pinned
+    mode that disagrees with an env-pinned mode is a ``ValueError`` — neither
+    side silently wins.  (``use_kernels=True`` is not explicit; the env pin
+    resolves it, which is rule 2.)
+    """
+    explicit = explicit_kernel_request(use_kernels)
+    if isinstance(use_kernels, str) and use_kernels.strip().lower() != "auto":
+        env = requested_policy()
+        if env != "auto" and env != explicit:
+            raise ValueError(
+                f"conflicting explicit kernel requests: config pins "
+                f"use_kernels={explicit!r} but {ENV_VAR}={env!r}; drop one "
+                "(config mode strings and the env pin must agree)"
+            )
+    mode = explicit if explicit is not None else bool(use_kernels)
+    return KernelPlan(mode=mode, launch=kernel_launch, layout=agg_layout)
 
 
 def explicit_kernel_request(use_kernels: bool | str | None) -> str | None:

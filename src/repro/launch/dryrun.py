@@ -31,7 +31,7 @@ import jax
 
 from repro.configs import ALIASES, get_config
 from repro.launch.analytic import analytic_report
-from repro.launch.hlo_analysis import analyze
+from repro.analysis.hlo import analyze
 from repro.launch.mesh import make_production_mesh, make_test_mesh, num_client_rows
 from repro.launch.specs import INPUT_SHAPES, input_specs
 from repro.launch.steps import build_step

@@ -15,7 +15,7 @@ Two workloads (``--workload``):
   mesh-ready path).
 * ``lora`` — clients train low-rank adapters on a frozen base and propose
   only the adapter delta; rounds go through the fused engine on the
-  ``(K, D_adapter)`` packed buffer (``fed.workload.run_llm_simulation``),
+  ``(K, D_adapter)`` packed buffer (``repro.fed.api.run``),
   with ``--byzantine`` clients running the update-level attack
   ``--scenario``.
 """
@@ -65,17 +65,20 @@ def make_fed_batches(cfg, stream, rng, *, K, S, b, seq):
 def run_lora(args) -> int:
     """The ``--workload lora`` route: fused-engine federated fine-tuning on
     low-rank adapter proposals (see repro.fed.workload)."""
-    from repro.fed.workload import get_workload, run_llm_simulation
+    from repro.fed.api import run
+    from repro.fed.simulator import SimConfig
+    from repro.fed.workload import get_workload
 
     workload = get_workload(
         "lora", arch=args.arch, reduced=args.reduced, rank=args.rank
     )
-    t0 = time.perf_counter()
-    res = run_llm_simulation(
-        workload, clients=args.clients, byzantine=args.byzantine,
-        rounds=args.rounds, local_steps=args.local_steps, batch=args.batch,
-        seq=args.seq, lr=args.lr, scenario=args.scenario,
+    sim = SimConfig(
+        num_clients=args.clients, bad_frac=args.byzantine / args.clients,
+        scenario=args.scenario, rounds=args.rounds,
+        local_epochs=args.local_steps, batch_size=args.batch, lr=args.lr,
     )
+    t0 = time.perf_counter()
+    res = run(workload, sim, seq=args.seq)
     dt = time.perf_counter() - t0
     print(
         f"lora workload: adapter_dim={res['adapter_dim']} "

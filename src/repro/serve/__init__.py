@@ -1,0 +1,45 @@
+"""repro.serve — the streaming aggregation tier (DESIGN.md §Serving tier).
+
+Async FedBuff-style rounds on the pure ``server_step`` core: clients submit
+at arbitrary logical times, the server aggregates when the buffer fills or
+the deadline expires, blocked ids are rejected at ingress before any unpack
+work, and stale updates enter the reputation posterior down-weighted by
+``staleness_decay ** tau``.  The synchronous fused engine is the exact
+``buffer = K, deadline = inf, decay = 1`` special case (bit-identical,
+test-asserted).
+"""
+
+from repro.serve.pool import ProposalPool
+from repro.serve.replay import ServeResult, run_serve_replay
+from repro.serve.service import (
+    ACCEPTED,
+    DECISIONS,
+    REJECTED_BLOCKED,
+    REJECTED_DUPLICATE,
+    REJECTED_INVALID,
+    REJECTED_STALE,
+    AggregationService,
+    RoundRecord,
+    ServeConfig,
+    SubmitResult,
+)
+from repro.serve.traffic import TrafficConfig, TrafficReport, run_traffic
+
+__all__ = [
+    "ACCEPTED",
+    "DECISIONS",
+    "REJECTED_BLOCKED",
+    "REJECTED_DUPLICATE",
+    "REJECTED_INVALID",
+    "REJECTED_STALE",
+    "AggregationService",
+    "ProposalPool",
+    "RoundRecord",
+    "ServeConfig",
+    "ServeResult",
+    "SubmitResult",
+    "TrafficConfig",
+    "TrafficReport",
+    "run_serve_replay",
+    "run_traffic",
+]

@@ -1,0 +1,74 @@
+"""Client-side cohort trainer for the serve tier.
+
+In deployment, clients compute their own updates.  In the simulation, the
+pool plays every client: for each params version it runs the fused engine's
+EXACT proposal pipeline (:func:`repro.fed.engine.make_packed_propose_fn` —
+participation masks, device minibatch draw, vmapped local SGD, update-level
+attacks, same RNG streams keyed by round and original client id) once for
+the whole cohort, packs the result to the (K, D) buffer, and serves
+individual rows from a small per-version cache.
+
+A client "fetching" the model at version ``v`` therefore receives the row
+the synchronous engine would have aggregated at round ``v`` — which is what
+makes the buffer=K replay bit-identical, and keeps stragglers honest: a row
+held across rounds stays the version-``v`` computation, never silently
+retrained against newer params.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ProposalPool:
+    """Per-version packed proposal buffers, computed lazily and LRU-cached.
+
+    ``rows(version, params, blocked)`` must be called with the params and
+    blocked set CURRENT at that version (the traffic driver fetches at
+    submit-scheduling time, so this holds by construction); within one
+    version both are constant, so the cache keys on the version alone.
+    """
+
+    def __init__(self, inputs, seed: int, *, cache_size: int = 4):
+        # `inputs` is a repro.fed.simulator.FusedInputs
+        from repro.fed.engine import make_packed_propose_fn
+
+        self._inputs = inputs
+        K = int(inputs.data.n_k.shape[0])
+        self.num_clients = K
+        self._propose = make_packed_propose_fn(
+            inputs.workload, inputs.engine_cfg, K,
+            inputs.batch_s, inputs.batch_b,
+        )
+        self._seed = jnp.uint32(seed)
+        self._bad = jnp.asarray(inputs.bad_mask)
+        self._ids = jnp.arange(K, dtype=jnp.uint32)
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self._cache_size = int(cache_size)
+
+    @property
+    def bad_mask(self) -> np.ndarray:
+        return np.asarray(self._inputs.bad_mask)
+
+    def rows(self, version: int, params, blocked) -> np.ndarray:
+        """The full (K, D) packed proposal buffer at ``version``."""
+        version = int(version)
+        if version not in self._cache:
+            buf = self._propose(
+                params, jnp.asarray(blocked), jnp.int32(version),
+                self._seed, self._inputs.data, self._bad, self._ids,
+            )
+            self._cache[version] = np.asarray(buf)
+            while len(self._cache) > self._cache_size:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(version)
+        return self._cache[version]
+
+    def row(self, client_id: int, version: int, params, blocked) -> np.ndarray:
+        """One client's packed proposal row at ``version`` (a copy — the
+        caller may hold it across rounds, straggler-style)."""
+        return self.rows(version, params, blocked)[int(client_id)].copy()

@@ -1,0 +1,106 @@
+"""Synchronous replay of a classification experiment through the serve tier.
+
+``run_serve_replay`` drives the :class:`~repro.serve.service.AggregationService`
+in lockstep — every live client fetches and submits once per round, in id
+order — which with the default ``ServeConfig`` (buffer = K, deadline = inf,
+staleness decay off) reproduces the fused engine's trajectory BIT-identically:
+the proposal rows come from the fused proposal pipeline
+(:class:`~repro.serve.pool.ProposalPool`) and the aggregation jit mirrors
+the fused round body's tail.  ``tests/test_serve.py`` asserts the equality;
+this module is also the template for the benchmark's sync baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import SyntheticClassification
+from repro.fed.server import ServerConfig
+from repro.fed.simulator import SimConfig, detection_stats, fused_inputs
+from repro.serve.pool import ProposalPool
+from repro.serve.service import AggregationService, ServeConfig
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Mirror of :class:`~repro.fed.simulator.SimResult` for the serve tier
+    (same conventions: percent errors, 1-indexed blocked rounds)."""
+
+    test_error: list
+    blocked_round: np.ndarray
+    bad_clients: np.ndarray
+    good_mask_history: list
+    detection_rate: float
+    mean_rounds_to_block: float
+    rounds: list                # the service's RoundRecords
+    decisions: dict             # ingress decision -> count
+
+
+def run_serve_replay(
+    data: SyntheticClassification,
+    sim: SimConfig,
+    server_cfg: ServerConfig | None = None,
+    serve_cfg: ServeConfig | None = None,
+    *,
+    eval_every: int = 1,
+    workload=None,
+) -> ServeResult:
+    """Run ``sim.rounds`` rounds of the experiment through the serve path.
+
+    One submission per live client per round (ascending client id), each
+    stamped with the params version it trained against.  When every client
+    is blocked the round is flushed empty — the all-blocked guard keeps the
+    params, exactly as the fused engine does.  With a non-default
+    ``serve_cfg`` (smaller buffer, finite deadline, staleness decay) the
+    same driver exercises genuinely buffered semantics: a round can fire
+    mid-loop and the remaining submissions land in the next one, one round
+    stale.
+    """
+    if server_cfg is None:
+        server_cfg = ServerConfig(num_clients=sim.num_clients)
+    if serve_cfg is None:
+        serve_cfg = ServeConfig()
+    inputs = fused_inputs(data, sim, workload=workload)
+    service = AggregationService(
+        inputs.workload, server_cfg, serve_cfg, inputs.params0, inputs.data
+    )
+    pool = ProposalPool(inputs, sim.seed)
+
+    for rnd in range(sim.rounds):
+        t = float(rnd)
+        blocked = service.blocked.copy()
+        version = service.round
+        rows = None
+        fired = False
+        for k in range(sim.num_clients):
+            if blocked[k]:
+                continue
+            if rows is None:  # one cohort computation per version
+                rows = pool.rows(version, service.params, blocked)
+            out = service.submit(k, rows[k], version, now=t)
+            fired = fired or out.fired is not None
+        if not fired:
+            # all clients blocked (or a partial buffer left open at the
+            # round boundary): aggregate what there is — empty participation
+            # keeps the params via the all-blocked guard
+            service.flush(now=t)
+
+    errs = [r.test_error * 100.0 for r in service.rounds]
+    test_error = [
+        errs[r] for r in range(len(errs))
+        if r % eval_every == 0 or r == len(errs) - 1
+    ]
+    bad = np.flatnonzero(inputs.bad_mask)
+    rate, mean_rounds = detection_stats(service.rounds_blocked, bad)
+    return ServeResult(
+        test_error=test_error,
+        blocked_round=service.rounds_blocked,
+        bad_clients=bad,
+        good_mask_history=[r.good_mask for r in service.rounds],
+        detection_rate=rate,
+        mean_rounds_to_block=mean_rounds,
+        rounds=list(service.rounds),
+        decisions=dict(service.decisions),
+    )

@@ -1,0 +1,342 @@
+"""The async aggregation service: FedBuff-style buffered rounds on the pure
+``server_step`` core, with the paper's blocking as ADMISSION CONTROL.
+
+Clients submit packed proposal rows at arbitrary (logical) times; the server
+aggregates whenever the round buffer fills or the round deadline expires.
+Three properties make this the paper's efficiency claim in deployable form:
+
+* **Ingress blocking** — a blocked client id is rejected BEFORE the payload
+  is unpacked, validated, or buffered.  Blocking therefore stops costing the
+  server per-submission compute, not just per-round aggregation weight.
+* **Staleness-aware reputation** — an update trained against params from
+  round ``t - tau`` enters the Beta posterior down-weighted by
+  ``staleness_decay ** tau`` (``server_step_versioned``): stale evidence is
+  weaker evidence, so slow-but-honest clients aren't punished like attackers,
+  and attackers can't launder forged updates through staleness.
+* **Sync bit-identity** — with ``buffer_size = K``, ``deadline = inf``, and
+  decay disabled, driving one submission per live client per round
+  reproduces the synchronous fused engine's trajectory BIT-identically
+  (``repro.serve.replay``; asserted in ``tests/test_serve.py``).  The async
+  tier is a strict generalization, not a fork, of the batch semantics.
+
+Time is a first-class INPUT here (``now`` arguments, logical ticks) — the
+service itself never reads a wall clock, so any driver schedule is exactly
+replayable in tests.  ``benchmarks/serve_tier.py`` measures wall time from
+the outside.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.engine import FusedData
+from repro.fed.server import (
+    ServerConfig,
+    init_server_state,
+    make_rule_options,
+    server_step_versioned,
+)
+from repro.utils.trees import pack_stack, unpack_stack
+
+# ingress decisions, in the order the checks run (cheapest first — the two
+# id-only checks never touch the payload)
+ACCEPTED = "accepted"
+REJECTED_BLOCKED = "rejected_blocked"      # paper's blocking, as admission
+REJECTED_DUPLICATE = "rejected_duplicate"  # id already in the open round
+REJECTED_STALE = "rejected_stale"          # tau > max_staleness
+REJECTED_INVALID = "rejected_invalid"      # codec validation failed
+DECISIONS = (
+    ACCEPTED, REJECTED_BLOCKED, REJECTED_DUPLICATE, REJECTED_STALE,
+    REJECTED_INVALID,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Buffer/deadline/staleness policy of the async tier.
+
+    ``buffer_size = 0`` means "the full client count" (the synchronous
+    special case); the effective fill target each round is
+    ``min(buffer_size, live clients)`` so a shrinking cohort can never
+    deadlock the buffer.  ``deadline`` is in the driver's logical time
+    units; ``inf`` disables deadline rounds.  ``max_staleness = None``
+    admits any staleness (the decay still down-weights it); an integer
+    drops submissions with ``tau > max_staleness`` at ingress, reputation
+    untouched.
+    """
+
+    buffer_size: int = 0
+    deadline: float = math.inf
+    max_staleness: Optional[int] = None
+    staleness_decay: float = 1.0
+
+    def __post_init__(self):
+        if self.buffer_size < 0:
+            raise ValueError(f"buffer_size={self.buffer_size} < 0")
+        if not self.deadline > 0:
+            raise ValueError(f"deadline={self.deadline} must be positive")
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError(f"max_staleness={self.max_staleness} < 0")
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError(
+                f"staleness_decay={self.staleness_decay} outside (0, 1]"
+            )
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Host-side log entry of one fired aggregation round."""
+
+    index: int            # server round counter when the round fired
+    opened_at: float      # logical time the round opened
+    fired_at: float       # logical time it aggregated
+    trigger: str          # "buffer" | "deadline" | "flush"
+    n_accepted: int       # buffered submissions aggregated
+    all_blocked: bool     # empty participation — params were kept
+    test_error: float     # workload eval after the round (fraction)
+    good_mask: np.ndarray  # (K,) rule's kept-set
+    n_blocked: int        # total blocked clients AFTER the round
+
+    @property
+    def latency(self) -> float:
+        return self.fired_at - self.opened_at
+
+
+class SubmitResult(NamedTuple):
+    decision: str
+    fired: Optional[RoundRecord]  # set when this submission closed the round
+
+
+@functools.lru_cache(maxsize=32)
+def _make_agg_step(workload, rule, opts, delta_block, staleness_decay):
+    """jit'd aggregation tail of one async round — the EXACT op sequence of
+    the fused round body's aggregation phase (pack boundary at the (K, D)
+    buffer, all-blocked guard in proposal space, codec apply, eval), so the
+    synchronous replay reproduces the fused trajectory bit for bit."""
+
+    @jax.jit
+    def step(params, state, rows, n_k, mask0, versions, x_test, y_test):
+        pspec = workload.delta_spec(params)
+        w_prev = workload.codec.proposal_of(params)
+        # rows not accepted this round hold the packed current proposal
+        # point w_t — exactly what the fused body's masked rows carry
+        w_row = pack_stack(
+            jax.tree_util.tree_map(lambda l: l[None], w_prev), pspec
+        )[0]
+        buffer = jnp.where(mask0[:, None], rows, w_row[None, :])
+        state, res = server_step_versioned(
+            state, buffer, n_k, mask0, versions,
+            rule=rule, opts=opts, delta_block=delta_block, layout="packed",
+            staleness_decay=staleness_decay,
+        )
+        aggregate = unpack_stack(res.aggregate, pspec)
+        aggregate = jax.tree_util.tree_map(
+            lambda prev, new: jnp.where(res.all_blocked, prev, new),
+            w_prev, aggregate,
+        )
+        params = workload.codec.apply(params, aggregate)
+        err = workload.eval_metric(params, x_test, y_test)
+        return params, state, res.good_mask, res.all_blocked, err
+
+    return step
+
+
+class AggregationService:
+    """The stateful async server: ingress admission + buffered aggregation.
+
+    Drive it with :meth:`submit` (one packed proposal row per call) and
+    :meth:`poll` (advance logical time so deadline rounds fire).  All
+    aggregation math lives in one cached jit (:func:`_make_agg_step`) on the
+    pure ``server_step_versioned`` core; the host side is a (K, D) numpy
+    staging buffer and O(K) bookkeeping.
+    """
+
+    def __init__(
+        self,
+        workload,
+        server_cfg: ServerConfig,
+        serve_cfg: ServeConfig,
+        params0,
+        data: FusedData,
+    ):
+        K = server_cfg.num_clients
+        self.workload = workload
+        self.server_cfg = server_cfg
+        self.cfg = serve_cfg
+        self._data = data
+        self._pspec = workload.delta_spec(params0)
+        self._params = params0
+        self._state = init_server_state(
+            K, server_cfg.alpha0, server_cfg.beta0
+        )
+        self._step = _make_agg_step(
+            workload, server_cfg.rule, make_rule_options(server_cfg, K),
+            float(server_cfg.delta_block), float(serve_cfg.staleness_decay),
+        )
+        self._rows = np.zeros((K, self._pspec.dim), self._pspec.dtype)
+        self._mask = np.zeros(K, bool)
+        self._versions = np.zeros(K, np.int32)
+        self._blocked = np.zeros(K, bool)
+        self._round = 0
+        self._opened_at = 0.0
+        self.rounds: list[RoundRecord] = []
+        self.decisions: dict[str, int] = {d: 0 for d in DECISIONS}
+        # (time, client, decision) ingress log — drivers/tests replay it
+        self.log: list[tuple[float, int, str]] = []
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def num_clients(self) -> int:
+        return self.server_cfg.num_clients
+
+    @property
+    def round(self) -> int:
+        """Server round counter == version stamp of the current params."""
+        return self._round
+
+    @property
+    def params(self):
+        return self._params
+
+    @property
+    def state(self):
+        return self._state
+
+    @property
+    def blocked(self) -> np.ndarray:
+        return self._blocked
+
+    @property
+    def accepted_count(self) -> int:
+        return int(self._mask.sum())
+
+    def _fill_target(self) -> int:
+        """Buffer fill that closes the round: min(buffer_size, live clients)
+        — blocking SHRINKS the target, so a decimated cohort still rounds."""
+        live = self.num_clients - int(self._blocked.sum())
+        size = self.cfg.buffer_size or self.num_clients
+        return max(min(size, live), 1)
+
+    # -- ingress -------------------------------------------------------------
+    def submit(self, client_id: int, payload, version: int, now: float
+               ) -> SubmitResult:
+        """Admit (or reject) one client submission at logical time ``now``.
+
+        Admission checks run cheapest-first and the first two never touch
+        the payload — a blocked client costs the server an O(1) id lookup,
+        nothing else:
+
+        1. **blocked** — the paper's blocking as admission control;
+        2. **duplicate** — the id already contributed to the open round;
+        3. **stale** — ``tau = round - version`` exceeds ``max_staleness``
+           (reputation untouched: a late update is dropped, not punished);
+        4. **invalid** — the workload codec rejects the row
+           (shape/dtype/finiteness, ``fed/workload.validate_submission``).
+
+        An accepted row is staged into the (K, D) buffer; if it fills the
+        round's target the round aggregates immediately and the returned
+        :class:`SubmitResult` carries the fired :class:`RoundRecord`.
+        """
+        fired = None
+        cid = int(client_id)
+        if not 0 <= cid < self.num_clients:
+            raise ValueError(f"client id {cid} outside 0..{self.num_clients - 1}")
+        if self._blocked[cid]:
+            decision = REJECTED_BLOCKED
+        elif self._mask[cid]:
+            decision = REJECTED_DUPLICATE
+        else:
+            version = int(version)
+            tau = self._round - version
+            if tau < 0:
+                decision = REJECTED_INVALID  # from the future: corrupt stamp
+            elif (
+                self.cfg.max_staleness is not None
+                and tau > self.cfg.max_staleness
+            ):
+                decision = REJECTED_STALE
+            else:
+                try:
+                    row = self.workload.validate_submission(
+                        self._params, payload
+                    )
+                except ValueError:
+                    decision = REJECTED_INVALID
+                else:
+                    self._rows[cid] = row
+                    self._versions[cid] = version
+                    self._mask[cid] = True
+                    decision = ACCEPTED
+                    if self.accepted_count >= self._fill_target():
+                        fired = self._fire("buffer", float(now))
+        self.decisions[decision] += 1
+        self.log.append((float(now), cid, decision))
+        return SubmitResult(decision, fired)
+
+    # -- round firing --------------------------------------------------------
+    def poll(self, now: float) -> list[RoundRecord]:
+        """Advance logical time: fire every deadline round due by ``now``
+        (possibly empty ones — zero arrivals keep the params via the
+        all-blocked guard, never reset the model)."""
+        fired = []
+        while (
+            math.isfinite(self.cfg.deadline)
+            and now - self._opened_at >= self.cfg.deadline
+        ):
+            fired.append(
+                self._fire("deadline", self._opened_at + self.cfg.deadline)
+            )
+        return fired
+
+    def flush(self, now: float) -> RoundRecord:
+        """Force the open round to aggregate with whatever it has."""
+        return self._fire("flush", float(now))
+
+    def _fire(self, trigger: str, at: float) -> RoundRecord:
+        params, state, good_mask, all_blocked, err = self._step(
+            self._params, self._state, jnp.asarray(self._rows),
+            self._data.n_k, jnp.asarray(self._mask),
+            jnp.asarray(self._versions),
+            self._data.x_test, self._data.y_test,
+        )
+        self._params, self._state = params, state
+        self._blocked = np.asarray(state.reputation.blocked)
+        record = RoundRecord(
+            index=self._round,
+            opened_at=self._opened_at,
+            fired_at=at,
+            trigger=trigger,
+            n_accepted=self.accepted_count,
+            all_blocked=bool(np.asarray(all_blocked)),
+            test_error=float(np.asarray(err)),
+            good_mask=np.asarray(good_mask),
+            n_blocked=int(self._blocked.sum()),
+        )
+        self.rounds.append(record)
+        self._round += 1
+        self._mask[:] = False
+        self._opened_at = at
+        return record
+
+    # -- summaries -----------------------------------------------------------
+    @property
+    def rounds_blocked(self) -> np.ndarray:
+        return np.asarray(self._state.rounds_blocked)
+
+    def reject_fraction(self, client_ids, *, after: float = -math.inf) -> float:
+        """Fraction of the given clients' submissions after time ``after``
+        that ingress rejected as blocked — the benchmark's headline number."""
+        ids = set(int(c) for c in np.atleast_1d(np.asarray(client_ids)))
+        total = hits = 0
+        for t, cid, decision in self.log:
+            if cid in ids and t >= after:
+                total += 1
+                hits += decision == REJECTED_BLOCKED
+        return hits / total if total else float("nan")

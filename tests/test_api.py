@@ -1,0 +1,193 @@
+"""Facade and kernel-plan tests.
+
+``repro.fed.api.run`` must route bit-identically to the three historical
+entrypoints (which now live on as DeprecationWarning shims), and the four
+kernel/layout knobs must resolve through ONE frozen ``KernelPlan`` with a
+documented precedence and loud conflicts.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.data import make_mnist_like
+from repro.fed import (
+    ServerConfig,
+    SimConfig,
+    run,
+    run_simulation,
+    run_sweep,
+    simulate,
+    sweep,
+)
+from repro.fed.server import resolve_server_plan
+from repro.kernels.policy import KernelPlan, resolve_kernel_plan
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_mnist_like(n_train=500, n_test=120, dim=16)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SimConfig(
+        num_clients=6, bad_frac=0.34, scenario="byzantine", rounds=5,
+        local_epochs=1, batch_size=50, hidden=(8,), dropout=False, seed=0,
+        engine="fused",
+    )
+
+
+@pytest.fixture(scope="module")
+def server():
+    return ServerConfig(rule="afa", num_clients=6)
+
+
+# ---------------------------------------------------------------------------
+# 1. the facade routes bit-identically to the deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_run_simulation_shim_warns_and_matches_facade(data, sim, server):
+    with pytest.deprecated_call():
+        old = run_simulation(data, sim, server)
+    new = run(None, sim, server, data=data)
+    assert old.test_error == new.test_error  # float-exact trajectories
+    assert np.array_equal(old.blocked_round, new.blocked_round)
+    for a, b in zip(old.good_mask_history, new.good_mask_history):
+        assert np.array_equal(a, b)
+
+
+def test_run_sweep_shim_warns_and_matches_facade(data, sim, server):
+    with pytest.deprecated_call():
+        old = run_sweep(data, sim, server, seeds=[0, 1])
+    new = run(None, sim, server, data=data, seeds=[0, 1])
+    assert np.array_equal(old.seeds, new.seeds)
+    assert np.array_equal(old.test_error, new.test_error)
+    assert np.array_equal(old.blocked_round, new.blocked_round)
+    assert np.array_equal(old.good_mask_history, new.good_mask_history)
+
+
+def test_run_llm_shim_warns_and_matches_facade():
+    from repro.fed import run_llm_simulation
+    from repro.models import ModelConfig
+    from repro.fed.workload import get_workload
+
+    cfg = ModelConfig(
+        name="t-api-lora", family="dense", num_layers=2, d_model=32,
+        vocab_size=64, num_heads=4, num_kv_heads=2, d_ff=64,
+        block_q=16, block_k=16,
+    )
+    workload = get_workload("lora", model_cfg=cfg, rank=2)
+    with pytest.deprecated_call():
+        old = run_llm_simulation(
+            workload, clients=4, byzantine=1, rounds=3, local_steps=1,
+            batch=2, samples_per_client=8, seq=16, n_test=8, seed=0,
+            scenario="byzantine",
+        )
+    sim = SimConfig(
+        num_clients=4, bad_frac=0.25, scenario="byzantine", rounds=3,
+        local_epochs=1, batch_size=2, seed=0, lr=0.2,
+    )
+    new = run(
+        workload, sim, samples_per_client=8, seq=16, n_test=8
+    )
+    assert np.array_equal(old["test_error"], new["test_error"])
+    assert np.array_equal(old["blocked"], new["blocked"])
+    assert np.array_equal(old["good_frac"], new["good_frac"])
+
+
+def test_facade_argument_errors(data, sim, server):
+    with pytest.raises(ValueError, match="needs `data`"):
+        run(None, sim, server)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        run(None, sim, server, data=data, seq=16)
+    with pytest.raises(ValueError, match="workload_kwargs"):
+        run(object(), sim, server, workload_kwargs={"rank": 2})
+
+
+# ---------------------------------------------------------------------------
+# 2. KernelPlan: one resolved config for four historical knobs
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_plan_is_frozen_and_validated():
+    plan = KernelPlan(mode="interpret", launch="chained", layout="tree")
+    with pytest.raises(Exception):
+        plan.mode = "jnp"  # frozen
+    with pytest.raises(ValueError):
+        KernelPlan(mode="warp")
+    with pytest.raises(ValueError):
+        KernelPlan(launch="exploded")
+    with pytest.raises(ValueError):
+        KernelPlan(layout="diagonal")
+
+
+def test_resolve_precedence_config_pin_beats_env(monkeypatch):
+    # 1. an explicit config mode string pins the mode
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert resolve_kernel_plan("interpret").mode == "interpret"
+    # 2. with config on auto, an env pin elevates use_kernels=True
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    assert resolve_kernel_plan(True).mode == "interpret"
+    # the explicit "auto" string defers to the backend at dispatch (the env
+    # pin then resolves the True), never an explicit demand
+    assert resolve_kernel_plan("auto").mode is True
+    # matching pins agree quietly
+    assert resolve_kernel_plan("interpret").mode == "interpret"
+    # 3. no pins: the bool passes through for runtime auto-detection
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert resolve_kernel_plan(True).mode is True
+    assert resolve_kernel_plan(False).mode is False
+
+
+def test_resolve_conflicting_explicit_requests_raise(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "jnp")
+    with pytest.raises(ValueError, match="REPRO_KERNELS"):
+        resolve_kernel_plan("interpret")
+
+
+def test_server_config_legacy_knobs_warn_and_map(recwarn):
+    cfg = ServerConfig(num_clients=4, use_kernels="interpret", agg_layout="tree")
+    with pytest.deprecated_call():
+        plan = resolve_server_plan(cfg)
+    assert plan == KernelPlan(mode="interpret", launch="fused", layout="tree")
+
+    # the new spelling resolves silently
+    cfg2 = ServerConfig(
+        num_clients=4, kernel_plan=KernelPlan(mode="interpret", layout="tree")
+    )
+    recwarn.clear()
+    assert resolve_server_plan(cfg2) == plan
+    assert not any(
+        issubclass(w.category, DeprecationWarning) for w in recwarn.list
+    )
+
+
+def test_server_config_conflicting_knobs_raise():
+    cfg = ServerConfig(
+        num_clients=4,
+        kernel_plan=KernelPlan(layout="packed"),
+        agg_layout="tree",
+    )
+    with pytest.raises(ValueError, match="conflicts"):
+        resolve_server_plan(cfg)
+
+
+def test_simulate_threads_plan_layouts_bit_identically(data, sim, server):
+    """kernel_plan layouts route through make_rule_options and the engines:
+    tree and packed layouts must agree bit for bit (the fused engine's
+    layout contract), now spelled through the ONE knob."""
+    import dataclasses as dc
+
+    res_p = simulate(
+        data, sim,
+        dc.replace(server, kernel_plan=KernelPlan(layout="packed")),
+    )
+    res_t = simulate(
+        data, sim,
+        dc.replace(server, kernel_plan=KernelPlan(layout="tree")),
+    )
+    assert res_p.test_error == res_t.test_error
+    assert np.array_equal(res_p.blocked_round, res_t.blocked_round)

@@ -100,9 +100,12 @@ def test_traffic_proxy_counts_all_fusion_operands():
     assert rec["hbm_traffic_proxy_bytes"] == expected
 
 
-def test_launch_shim_reexports_the_absorbed_module():
-    """repro.launch.hlo_analysis must keep working as an import path."""
-    from repro.launch import hlo_analysis as shim
+def test_launch_shim_is_gone():
+    """The deprecation window for repro.launch.hlo_analysis is over — the
+    canonical home is repro.analysis.hlo, and the shim must NOT linger."""
+    import importlib
 
-    assert shim.analyze is analyze
-    assert shim.split_computations is split_computations
+    import pytest
+
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.launch.hlo_analysis")

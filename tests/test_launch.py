@@ -9,7 +9,7 @@ import sys
 import jax
 import pytest
 
-from repro.launch.hlo_analysis import (
+from repro.analysis.hlo import (
     analyze,
     computation_multipliers,
     shape_bytes,

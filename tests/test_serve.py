@@ -1,0 +1,264 @@
+"""Serve-tier tests: sync bit-identity, ingress admission order, failure
+paths, staleness semantics, and traffic determinism (DESIGN.md §Serving
+tier).
+
+The expensive fixtures (one fused run, one replay, one traffic run) are
+module-scoped; the admission-path tests drive a fresh service by hand with
+hand-built rows, which costs one small jit each at most.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_mnist_like
+from repro.fed import ServerConfig, SimConfig, simulate
+from repro.fed.simulator import fused_inputs
+from repro.serve import (
+    ACCEPTED,
+    REJECTED_BLOCKED,
+    REJECTED_DUPLICATE,
+    REJECTED_INVALID,
+    REJECTED_STALE,
+    AggregationService,
+    ProposalPool,
+    ServeConfig,
+    TrafficConfig,
+    run_serve_replay,
+    run_traffic,
+)
+
+K = 8
+ROUNDS = 12  # enough for AFA to block both attackers (smoke: round 6)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_mnist_like(n_train=600, n_test=150, dim=20)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return SimConfig(
+        num_clients=K, bad_frac=0.25, scenario="byzantine", rounds=ROUNDS,
+        local_epochs=2, batch_size=50, hidden=(16,), dropout=False, seed=0,
+        engine="fused",
+    )
+
+
+@pytest.fixture(scope="module")
+def server():
+    return ServerConfig(rule="afa", num_clients=K)
+
+
+@pytest.fixture(scope="module")
+def inputs(data, sim):
+    return fused_inputs(data, sim)
+
+
+def _service(inputs, server, serve_cfg):
+    return AggregationService(
+        inputs.workload, server, serve_cfg, inputs.params0, inputs.data
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. the acceptance criterion: buffer=K / deadline=inf / decay off replays
+#    the fused engine bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_sync_replay_bit_identical_to_fused_engine(data, sim, server):
+    ref = simulate(data, sim, server, eval_every=1)
+    out = run_serve_replay(data, sim, server)  # default ServeConfig
+
+    # the run must exercise blocking, or the equality proves too little
+    assert (np.asarray(ref.blocked_round) >= 0).any()
+    assert ref.test_error == out.test_error  # float-exact, every round
+    assert np.array_equal(ref.blocked_round, out.blocked_round)
+    assert len(ref.good_mask_history) == len(out.good_mask_history)
+    for a, b in zip(ref.good_mask_history, out.good_mask_history):
+        assert np.array_equal(a, b)
+    # every round closed on a full live buffer, nothing was rejected
+    assert all(r.trigger in ("buffer", "flush") for r in out.rounds)
+    assert out.decisions[ACCEPTED] > 0
+    assert sum(v for d, v in out.decisions.items() if d != ACCEPTED) == 0
+
+
+# ---------------------------------------------------------------------------
+# 2. ingress admission paths
+# ---------------------------------------------------------------------------
+
+
+def test_blocked_client_resubmission_rejected_at_ingress(inputs, server):
+    svc = _service(inputs, server, ServeConfig())
+    pool = ProposalPool(inputs, 0)
+    # run sync rounds until AFA blocks the byzantine clients
+    for rnd in range(ROUNDS):
+        blocked = svc.blocked.copy()
+        rows = pool.rows(svc.round, svc.params, blocked)
+        for k in range(K):
+            if not blocked[k]:
+                svc.submit(k, rows[k], svc.round, now=float(rnd))
+        if svc.blocked.any():
+            break
+    assert svc.blocked.any(), "no client was blocked within the horizon"
+    bad = int(np.flatnonzero(svc.blocked)[0])
+
+    alpha = np.asarray(svc.state.reputation.alpha).copy()
+    n_before = svc.accepted_count
+    out = svc.submit(bad, rows[bad], svc.round, now=99.0)
+    assert out.decision == REJECTED_BLOCKED and out.fired is None
+    # rejected before any buffering or aggregation work
+    assert svc.accepted_count == n_before
+    assert svc.blocked[bad]
+    assert np.array_equal(np.asarray(svc.state.reputation.alpha), alpha)
+
+
+def test_duplicate_submission_same_round_rejected(inputs, server):
+    svc = _service(inputs, server, ServeConfig(buffer_size=K))
+    pool = ProposalPool(inputs, 0)
+    rows = pool.rows(0, svc.params, svc.blocked)
+    assert svc.submit(2, rows[2], 0, now=0.0).decision == ACCEPTED
+    out = svc.submit(2, rows[2], 0, now=0.1)
+    assert out.decision == REJECTED_DUPLICATE
+    assert svc.accepted_count == 1
+
+
+def test_stale_submission_dropped_and_reputation_untouched(inputs, server):
+    svc = _service(
+        inputs, server, ServeConfig(buffer_size=2, max_staleness=0)
+    )
+    pool = ProposalPool(inputs, 0)
+    rows0 = pool.rows(0, svc.params, svc.blocked)
+    # fire round 0 with two version-0 submissions
+    svc.submit(2, rows0[2], 0, now=0.0)
+    fired = svc.submit(3, rows0[3], 0, now=0.1).fired
+    assert fired is not None and svc.round == 1
+
+    alpha = np.asarray(svc.state.reputation.alpha).copy()
+    beta = np.asarray(svc.state.reputation.beta).copy()
+    out = svc.submit(4, rows0[4], 0, now=0.2)  # tau = 1 > max_staleness = 0
+    assert out.decision == REJECTED_STALE
+    assert svc.accepted_count == 0
+    assert np.array_equal(np.asarray(svc.state.reputation.alpha), alpha)
+    assert np.array_equal(np.asarray(svc.state.reputation.beta), beta)
+    # a version stamp from the future is corrupt, not stale
+    assert svc.submit(4, rows0[4], 5, now=0.3).decision == REJECTED_INVALID
+
+
+def test_invalid_payload_rejected_by_codec_validation(inputs, server):
+    svc = _service(inputs, server, ServeConfig())
+    dim = svc._pspec.dim
+    bad_shape = np.zeros(dim + 1, np.float32)
+    assert svc.submit(0, bad_shape, 0, now=0.0).decision == REJECTED_INVALID
+    nonfinite = np.full(dim, np.nan, np.float32)
+    assert svc.submit(0, nonfinite, 0, now=0.0).decision == REJECTED_INVALID
+    assert svc.accepted_count == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. deadline and staleness semantics
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_with_zero_arrivals_keeps_params(inputs, server):
+    svc = _service(inputs, server, ServeConfig(deadline=1.0))
+    p0 = [np.asarray(l) for l in jax.tree_util.tree_leaves(svc.params)]
+    alpha = np.asarray(svc.state.reputation.alpha).copy()
+    fired = svc.poll(3.0)  # three deadlines elapsed, nobody submitted
+    assert [r.trigger for r in fired] == ["deadline"] * 3
+    assert all(r.all_blocked and r.n_accepted == 0 for r in fired)
+    p1 = [np.asarray(l) for l in jax.tree_util.tree_leaves(svc.params)]
+    # the all-blocked guard held the params bit for bit; reputation untouched
+    assert all(np.array_equal(a, b) for a, b in zip(p0, p1))
+    assert np.array_equal(np.asarray(svc.state.reputation.alpha), alpha)
+    assert not svc.blocked.any()
+    assert svc.round == 3  # the server's version still advanced
+
+
+def test_staleness_decay_downweights_posterior_increments(inputs, server):
+    gamma = 0.5
+    svc = _service(
+        inputs, server,
+        ServeConfig(buffer_size=K, staleness_decay=gamma, max_staleness=4),
+    )
+    pool = ProposalPool(inputs, 0)
+    rows0 = pool.rows(0, svc.params, svc.blocked)
+    for k in range(K):  # round 0: everyone fresh (tau = 0, weight 1)
+        svc.submit(k, rows0[k], 0, now=0.0)
+    a1 = np.asarray(svc.state.reputation.alpha)
+    b1 = np.asarray(svc.state.reputation.beta)
+    inc1 = (a1 - server.alpha0) + (b1 - server.beta0)
+    assert np.allclose(inc1[~svc.blocked], 1.0)  # live rows got full weight
+
+    # round 1: every live client submits its STALE round-0 row (tau = 1)
+    blocked = svc.blocked.copy()
+    live = ~blocked
+    for k in range(K):
+        if live[k]:
+            svc.submit(k, rows0[k], 0, now=1.0)
+    a2 = np.asarray(svc.state.reputation.alpha)
+    b2 = np.asarray(svc.state.reputation.beta)
+    inc2 = (a2 - a1) + (b2 - b1)
+    assert np.allclose(inc2[live], gamma)       # decayed evidence
+    assert np.allclose(inc2[blocked], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# 4. async traffic: determinism and ingress efficiency
+# ---------------------------------------------------------------------------
+
+TRAFFIC = TrafficConfig(seed=3, straggler_frac=0.25, burst_every=5.0)
+ASYNC = ServeConfig(
+    buffer_size=6, deadline=4.0, max_staleness=2, staleness_decay=0.7
+)
+
+
+@pytest.fixture(scope="module")
+def traffic_run(inputs, server):
+    svc = _service(inputs, server, ASYNC)
+    rep = run_traffic(svc, ProposalPool(inputs, 0), TRAFFIC, target_rounds=20)
+    return svc, rep
+
+
+def test_traffic_blocks_attackers_and_rejects_them_at_ingress(
+    traffic_run, inputs
+):
+    svc, rep = traffic_run
+    assert len(rep.rounds) == 20
+    # the paper's detection survives async arrivals: exactly the byzantine
+    # clients end up blocked
+    assert np.array_equal(svc.blocked, inputs.bad_mask)
+    # ...and once blocked, their reconnect attempts die at the front door
+    assert rep.byz_submissions_after_block > 0
+    assert rep.byz_reject_fraction >= 0.95
+    # async knobs were actually exercised
+    assert rep.decisions[REJECTED_DUPLICATE] > 0
+    assert rep.decisions[REJECTED_STALE] > 0
+
+
+def test_traffic_replay_is_deterministic(traffic_run, inputs, server):
+    svc, rep = traffic_run
+    svc2 = _service(inputs, server, ASYNC)
+    rep2 = run_traffic(
+        svc2, ProposalPool(inputs, 0), TRAFFIC, target_rounds=20
+    )
+    assert svc.log == svc2.log
+    assert [r.test_error for r in rep.rounds] == [
+        r.test_error for r in rep2.rounds
+    ]
+    assert [r.fired_at for r in rep.rounds] == [
+        r.fired_at for r in rep2.rounds
+    ]
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(buffer_size=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(deadline=0.0)
+    with pytest.raises(ValueError):
+        ServeConfig(staleness_decay=0.0)
+    with pytest.raises(ValueError):
+        ServeConfig(max_staleness=-2)
